@@ -1,0 +1,43 @@
+"""Paper F2/F4: collocation throughput vs sequential full-device execution.
+
+  small:  k jobs in parallel on k instances vs k sequential runs on 7g
+          — the paper's 2.83x headline;
+  medium/large: the same ratio collapses to ~1x (saturation, F4).
+"""
+from __future__ import annotations
+
+from benchmarks.common import PAPER_F2_SPEEDUP, by_group, csv_line, load_collocation
+from repro.core.instance import InstanceRecord
+
+
+def run() -> list[str]:
+    cells = by_group(load_collocation())
+    out = []
+    if not cells:
+        return ["collocation_throughput,SKIP,run repro.launch.collocate first"]
+    workloads = sorted({w for (w, _g) in cells})
+    for w in workloads:
+        full = cells.get((w, "7g.40gb one"))
+        if full is None:
+            continue
+        t_full = full["records"][0]["step_s"]
+        for prof in ("1g.5gb", "2g.10gb", "3g.20gb"):
+            par = cells.get((w, f"{prof} parallel"))
+            if par is None:
+                continue
+            k = len(par["records"])
+            t_par = max(r["step_s"] for r in par["records"])
+            speedup = (k * t_full) / t_par
+            ref = f",paper={PAPER_F2_SPEEDUP:.2f}x" if (w, prof) == ("resnet_small", "1g.5gb") else ""
+            out.append(
+                csv_line(
+                    f"F2_collocation_speedup/{w}/{k}x_{prof}",
+                    f"{speedup:.2f}",
+                    f"seq_on_7g={k}x{t_full:.5f}s par={t_par:.5f}s{ref}",
+                )
+            )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,48 @@
+"""Shared helpers for the benchmark harness: artifact loading + CSV output."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parent.parent
+COLLOCATION_DIR = ROOT / "artifacts" / "collocation"
+DRYRUN_DIR = ROOT / "artifacts" / "dryrun"
+
+# paper reference numbers (Section 4.1, resnet_small/medium/large)
+PAPER = {
+    # (workload, group) -> epoch time the paper measured, seconds
+    ("resnet_small", "1g.5gb one"): 39.8,
+    ("resnet_small", "7g.40gb one"): 16.1,
+    ("resnet_small", "2g.10gb one"): 25.7,
+    ("resnet_medium", "7g.40gb one"): 35.4 * 60,
+    ("resnet_medium", "2g.10gb one"): 106.8 * 60 / 3,  # not directly reported; parallel/3
+}
+PAPER_F1_RATIO = 39.8 / 16.1  # 2.47x: 1g vs 7g epoch time, small
+PAPER_F2_SPEEDUP = (7 * 16.1) / 39.8  # 2.83x collocation win, small
+
+
+def load_collocation() -> List[Dict]:
+    cells = []
+    if COLLOCATION_DIR.exists():
+        for f in sorted(COLLOCATION_DIR.glob("*.json")):
+            if f.name.startswith("_"):
+                continue
+            cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def load_dryrun() -> List[Dict]:
+    cells = []
+    if DRYRUN_DIR.exists():
+        for f in sorted(DRYRUN_DIR.glob("*.json")):
+            cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def by_group(cells: List[Dict]) -> Dict[tuple, Dict]:
+    return {(c["workload"], c["group"]): c for c in cells if c.get("status") == "OK"}
+
+
+def csv_line(name: str, value, derived: str = "") -> str:
+    return f"{name},{value},{derived}"

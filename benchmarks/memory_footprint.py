@@ -1,0 +1,61 @@
+"""Paper Fig 8 + F5: device memory per experiment, host-RAM scaling model.
+
+Device side: compiled peak bytes/device vs the instance HBM budget — the
+paper's GPU-memory chart and the OOM admission rows. Host side: the paper's
+"n parallel jobs -> n x RAM" from the pipeline queue accounting."""
+from __future__ import annotations
+
+from benchmarks.common import by_group, csv_line, load_collocation
+from repro.data import synthetic
+from repro.data.pipeline import HostPipeline
+from repro.telemetry.constants import HBM_PER_CHIP
+
+
+def run() -> list[str]:
+    cells = by_group(load_collocation())
+    out = []
+    for (workload, group), cell in sorted(cells.items()):
+        recs = cell["records"]
+        total = sum(r["peak_bytes_per_device"] * r["chips"] for r in recs)
+        out.append(
+            csv_line(
+                f"gpu_mem/{workload}/{group.replace(' ', '_')}",
+                f"{total/2**30:.2f}",
+                f"GiB aggregate; per_device={recs[0]['peak_bytes_per_device']/2**30:.3f}GiB "
+                f"budget={HBM_PER_CHIP/2**30:.0f}GiB fits={all(r['fits'] for r in recs)}",
+            )
+        )
+    # n-parallel => n x memory (exact in our accounting, paper Fig 8a)
+    for w in ("resnet_small", "resnet_medium"):
+        one = cells.get((w, "2g.10gb one"))
+        par = cells.get((w, "2g.10gb parallel"))
+        if one and par:
+            m1 = sum(r["peak_bytes_per_device"] * r["chips"] for r in one["records"])
+            mk = sum(r["peak_bytes_per_device"] * r["chips"] for r in par["records"])
+            k = len(par["records"])
+            out.append(
+                csv_line(
+                    f"gpu_mem_scaling/{w}/2g_parallel_over_one",
+                    f"{mk/m1:.2f}",
+                    f"expected={k} (n jobs -> n x memory)",
+                )
+            )
+    # host RAM model: prefetch queue bytes x n jobs (paper Fig 8b / F7)
+    for w, spec in (("resnet_small", synthetic.CIFAR10),
+                    ("resnet_medium", synthetic.IMAGENET64),
+                    ("resnet_large", synthetic.IMAGENET224)):
+        b = synthetic.image_batch(spec, 32, seed=0)
+        q = HostPipeline.queue_bytes(b, 10)
+        out.append(
+            csv_line(
+                f"host_queue_mem/{w}/one",
+                f"{q/2**20:.1f}",
+                "MiB (queue=10 batches); x7 jobs = "
+                f"{7*q/2**20:.1f} MiB (F7: n jobs -> n x host RAM)",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

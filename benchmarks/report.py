@@ -1,0 +1,87 @@
+"""Markdown report generator for EXPERIMENTS.md sections.
+
+    PYTHONPATH=src python -m benchmarks.report dryrun     # §Dry-run/§Roofline
+    PYTHONPATH=src python -m benchmarks.report perf       # §Perf tagged cells
+    PYTHONPATH=src python -m benchmarks.report collocate  # §Paper-claims
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import DRYRUN_DIR, load_collocation, load_dryrun
+
+
+def fmt_dryrun() -> str:
+    cells = load_dryrun()
+    base = [c for c in cells if c["status"] != "FAIL" and "__" not in c["cell"].replace(
+        c["cell"].rsplit("__", 1)[0], "", 1)]
+    # separate untagged (baseline) from tagged (perf variants)
+    def is_tagged(c):
+        return len(c["cell"].split("__")) > 3
+    rows = []
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | bound | MFU | useful | GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    for c in sorted(cells, key=lambda c: c["cell"]):
+        if is_tagged(c):
+            continue
+        parts = c["cell"].split("__")
+        if c["status"] == "SKIP":
+            n_skip += 1
+            out.append(f"| {parts[0]} | {parts[1]} | {parts[2]} | SKIP | — | — | — | — | — | {c['reason'][:40]} |")
+            continue
+        if c["status"] != "OK":
+            out.append(f"| {parts[0]} | {parts[1]} | {parts[2]} | FAIL | | | | | | |")
+            continue
+        n_ok += 1
+        r = c["roofline"]
+        out.append(
+            f"| {parts[0]} | {parts[1]} | {parts[2]} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['bound']} | "
+            f"{r['mfu']:.3f} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['peak_mem_bytes_per_device']/2**30:.2f} |"
+        )
+    out.insert(0, f"{n_ok} compiled cells + {n_skip} documented skips:\n")
+    return "\n".join(out)
+
+
+def fmt_perf() -> str:
+    cells = load_dryrun()
+    out = ["| cell | variant/tag | compute_s | memory_s | collective_s | step_s | frac | GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: c["cell"]):
+        parts = c["cell"].split("__")
+        if len(parts) <= 3 or c["status"] != "OK":
+            continue
+        r = c["roofline"]
+        out.append(
+            f"| {'__'.join(parts[:3])} | {parts[3]} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['step_s']:.4f} | "
+            f"{r['frac_of_roofline']:.4f} | {r['peak_mem_bytes_per_device']/2**30:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_collocate() -> str:
+    cells = load_collocation()
+    out = ["| workload | group | instances | step_s | epoch_s | fits | isolation |",
+           "|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["workload"], c["group"])):
+        if c.get("status") != "OK":
+            continue
+        recs = c["records"]
+        iso = c["isolation"]
+        out.append(
+            f"| {c['workload']} | {c['group']} | {len(recs)} | "
+            f"{recs[0]['step_s']:.5f} | {c['epoch_time_s'][0]:.2f} | "
+            f"{all(r['fits'] for r in recs)} | "
+            f"{'proved' if iso['disjoint'] and iso['programs_identical'] else 'FAILED'} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
+    print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate}[which]())

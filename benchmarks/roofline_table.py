@@ -1,0 +1,41 @@
+"""§Roofline: the full (arch x shape x mesh) table from dry-run artifacts.
+
+Prints all three roofline terms in seconds, the dominant bound, MFU,
+MODEL_FLOPS/HLO_FLOPs, and peak memory per device for every compiled cell,
+plus the explicit SKIP rows — EXPERIMENTS.md §Roofline is generated from
+this output.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_line, load_dryrun
+
+
+def run() -> list[str]:
+    cells = load_dryrun()
+    out = []
+    if not cells:
+        return ["roofline,SKIP,run `python -m repro.launch.dryrun --all --mesh both`"]
+    for c in cells:
+        name = c["cell"]
+        if c["status"] == "SKIP":
+            out.append(csv_line(f"roofline/{name}", "SKIP", c["reason"]))
+            continue
+        if c["status"] != "OK":
+            out.append(csv_line(f"roofline/{name}", "FAIL", c.get("error", "")[:80]))
+            continue
+        r = c["roofline"]
+        out.append(
+            csv_line(
+                f"roofline/{name}",
+                f"{r['step_s']:.4f}",
+                f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                f"collective={r['collective_s']:.4f}s bound={r['bound']} "
+                f"mfu={r['mfu']:.3f} useful={r['useful_flops_ratio']:.2f} "
+                f"mem/dev={r['peak_mem_bytes_per_device']/2**30:.2f}GiB",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

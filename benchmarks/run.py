@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only SECTION]
+
+Prints ``name,value,derived`` CSV lines. Sections read the characterization
+artifacts under artifacts/ (produced by repro.launch.collocate and
+repro.launch.dryrun); sections whose artifacts are missing print SKIP rows
+with the command to generate them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="run a single section")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        collocation_throughput,
+        kernel_bench,
+        memory_footprint,
+        roofline_table,
+        time_per_epoch,
+        utilization,
+    )
+
+    sections = [
+        ("time_per_epoch (paper fig 2/3, F1)", time_per_epoch.run),
+        ("collocation_throughput (F2/F4)", collocation_throughput.run),
+        ("utilization (paper fig 4-7)", utilization.run),
+        ("memory_footprint (paper fig 8, F5/F7)", memory_footprint.run),
+        ("roofline_table (section Roofline)", roofline_table.run),
+        ("kernel_bench", kernel_bench.run),
+    ]
+
+    failures = 0
+    print("name,value,derived")
+    for title, fn in sections:
+        if args.only and args.only not in title:
+            continue
+        print(f"# --- {title} ---")
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{title},ERROR,{e}")
+            traceback.print_exc(limit=3)
+        print(f"# ({title}: {time.time() - t0:.1f}s)")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Fig 2/3: time-per-epoch per (workload x device group).
+
+Reads the collocation characterization artifacts (roofline-derived step
+times on each carved instance x the paper's dataset cardinalities) and
+reproduces the two structural findings:
+
+  F1 sub-linear scaling — 1g is far less than 8x slower than 7g;
+  isolated == parallel — per-instance epoch time is independent of
+  co-located neighbours (exact, by program equivalence).
+"""
+from __future__ import annotations
+
+from benchmarks.common import PAPER_F1_RATIO, by_group, csv_line, load_collocation
+
+
+def run() -> list[str]:
+    cells = by_group(load_collocation())
+    out = []
+    if not cells:
+        return ["time_per_epoch,SKIP,run `python -m repro.launch.collocate` first"]
+    for (workload, group), cell in sorted(cells.items()):
+        for i, t in enumerate(cell["epoch_time_s"]):
+            out.append(
+                csv_line(
+                    f"epoch_time_s/{workload}/{group.replace(' ', '_')}/inst{i}",
+                    f"{t:.2f}",
+                    f"step_s={cell['records'][i]['step_s']:.5f}",
+                )
+            )
+    # F1: sub-linear latency scaling (small workload)
+    try:
+        t1 = cells[("resnet_small", "1g.5gb one")]["epoch_time_s"][0]
+        t7 = cells[("resnet_small", "7g.40gb one")]["epoch_time_s"][0]
+        ratio = t1 / t7
+        out.append(
+            csv_line(
+                "F1_small_1g_vs_7g_slowdown",
+                f"{ratio:.2f}",
+                f"paper=2.47x sublinear(<8x)={'yes' if ratio < 8 else 'NO'}",
+            )
+        )
+    except KeyError:
+        pass
+    # isolated == parallel (per instance)
+    for w in ("resnet_small", "resnet_medium", "resnet_large"):
+        for prof in ("1g.5gb", "2g.10gb", "3g.20gb"):
+            one = cells.get((w, f"{prof} one"))
+            par = cells.get((w, f"{prof} parallel"))
+            if not (one and par):
+                continue
+            t_one = one["epoch_time_s"][0]
+            t_pars = par["epoch_time_s"]
+            same = all(abs(t - t_one) < 1e-9 for t in t_pars)
+            out.append(
+                csv_line(
+                    f"isolation_epoch_equal/{w}/{prof}",
+                    "exact" if same else "DIFFERS",
+                    f"one={t_one:.2f}s parallel={t_pars[0]:.2f}s x{len(t_pars)}",
+                )
+            )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

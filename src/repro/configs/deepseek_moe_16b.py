@@ -1,0 +1,16 @@
+"""deepseek-moe-16b [moe] — fine-grained: 2 shared + 64 routed top-6
+(arXiv:2401.06066)."""
+from repro.configs.base import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=102400,
+    moe=MoESpec(n_experts=64, top_k=6, d_expert=1408, n_shared=2),
+    rope_theta=10_000.0,
+)

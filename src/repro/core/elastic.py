@@ -1,0 +1,86 @@
+"""Elastic re-partitioning: the MIG-reconfiguration analogue for pod slices.
+
+Fault model: a *slice unit* (32-chip block) becomes unhealthy — chips lost,
+links flapping, or persistent stragglers localized to the block. MIG's answer
+is to destroy and re-create GPU instances around the bad slice; ours is the
+same algebra on the placement tree:
+
+  1. mark failed units; every instance whose span intersects them dies;
+  2. jobs from dead instances re-enter the queue (priority bumped so they
+     reclaim capacity first), joined by still-pending jobs;
+  3. the scheduler re-packs onto the surviving units — the placement tree is
+     filtered to placements that avoid failed units;
+  4. re-placed jobs resume from their last checkpoint (checkpoint/),
+     which is exactly the paper's "no interference" guarantee doing real
+     work: survivors never restart, because their instances were untouched.
+
+Elastic *scale-up* is the same path in reverse: units returning to health
+re-enter the free set and the next scheduling round may widen placements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.core.collocation import Assignment, CollocationScheduler, Schedule
+from repro.core.instance import JobSpec
+from repro.core.profiles import N_UNITS, Placement
+
+
+@dataclasses.dataclass
+class RepackEvent:
+    failed_units: Tuple[int, ...]
+    killed_jobs: Tuple[str, ...]
+    survivors: Tuple[str, ...]
+    new_schedule: Schedule
+    resumed_from_checkpoint: Tuple[str, ...]
+
+
+class ElasticController:
+    """Tracks unit health and drives repacking through the scheduler."""
+
+    def __init__(self, scheduler: CollocationScheduler):
+        self.scheduler = scheduler
+        self.failed: Set[int] = set()
+
+    def mark_failed(self, units: Sequence[int]) -> None:
+        self.failed.update(units)
+
+    def mark_healthy(self, units: Sequence[int]) -> None:
+        self.failed.difference_update(units)
+
+    def _span_units(self, pl: Placement) -> Set[int]:
+        if pl.profile == "7g.40gb":
+            return set(range(N_UNITS))
+        s0, s1 = pl.span
+        return set(range(s0, s1))
+
+    def repack(self, schedule: Schedule) -> RepackEvent:
+        """Kill intersecting instances, re-pack their jobs onto survivors."""
+        killed: List[JobSpec] = []
+        survivors: List[Assignment] = []
+        for a in schedule.assignments:
+            if self._span_units(a.placement) & self.failed:
+                killed.append(
+                    dataclasses.replace(a.job, priority=a.job.priority + 10)
+                )
+            else:
+                survivors.append(a)
+
+        # re-pack ONLY the killed jobs into the remaining free units: the
+        # scheduler sees survivors' units + failed units as occupied.
+        occupied = set(self.failed)
+        for a in survivors:
+            occupied |= self._span_units(a.placement)
+        partial = self.scheduler.schedule(killed, blocked_units=frozenset(occupied))
+
+        new = Schedule(survivors + partial.assignments, partial.rejections)
+        return RepackEvent(
+            failed_units=tuple(sorted(self.failed)),
+            killed_jobs=tuple(j.name for j in killed),
+            survivors=tuple(a.job.name for a in survivors),
+            new_schedule=new,
+            resumed_from_checkpoint=tuple(
+                a.job.name for a in partial.assignments
+            ),
+        )

@@ -1,0 +1,100 @@
+"""Device-group metric aggregation — the paper's §4.2 reporting, derived.
+
+The paper reports GRACT/SMACT/SMOCC/DRAMA twice per experiment: once per
+*instance* and once for the *full device*, where unoccupied slice units pull
+the device-level number down (their engines are idle). We reproduce both
+views from the per-instance characterization records:
+
+    instance-level  = the record's own DCGM analogues;
+    device-level    = sum_i(metric_i * mem_units_i) / 8   (idle units = 0).
+
+This reproduces the paper's headline structure: 1g.5gb-parallel maximizes
+device-level activity for small workloads, 7g.40gb-one minimizes it, and a
+single small instance barely registers at device level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from repro.core.instance import InstanceRecord
+from repro.core.profiles import N_UNITS, PROFILES
+
+
+@dataclasses.dataclass
+class DeviceGroupReport:
+    """One paper 'device group' (e.g. ``2g.10gb parallel``) row."""
+
+    group: str  # "1g.5gb one" | "1g.5gb parallel" | "non-MIG" ...
+    workload: str
+    instance_metrics: List[Dict[str, float]]  # per instance
+    device_metrics: Dict[str, float]  # unit-weighted over the full pod
+    occupied_units: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+_METRICS = ("gract", "smact", "smocc_proxy", "drama")
+
+
+def device_group_report(
+    group: str, workload: str, records: Sequence[InstanceRecord]
+) -> DeviceGroupReport:
+    inst_metrics = [dict(r.dcgm) for r in records]
+    occupied = sum(PROFILES[r.profile].mem_units for r in records)
+    device = {}
+    for m in _METRICS:
+        device[m] = sum(
+            r.dcgm[m] * PROFILES[r.profile].mem_units for r in records
+        ) / N_UNITS
+    return DeviceGroupReport(
+        group=group,
+        workload=workload,
+        instance_metrics=inst_metrics,
+        device_metrics=device,
+        occupied_units=occupied,
+    )
+
+
+def epoch_time_s(record: InstanceRecord, samples_per_epoch: int, batch: int) -> float:
+    """Paper metric #1: step-time roofline x steps per epoch."""
+    steps = -(-samples_per_epoch // batch)
+    return record.step_s * steps
+
+
+def throughput_jobs_per_s(records: Sequence[InstanceRecord]) -> float:
+    """Aggregate work rate of a parallel device group (jobs / second),
+    where each job contributes 1/step_s. The paper's F2 compares this to
+    running the same jobs sequentially on the full-device profile."""
+    return sum(1.0 / r.step_s for r in records if r.step_s > 0)
+
+
+def collocation_speedup(
+    parallel: Sequence[InstanceRecord], isolated_full: InstanceRecord
+) -> float:
+    """F2: time(sequential on 7g) / time(parallel on k instances).
+
+    k jobs sequentially on the full device take k * step_full; in parallel
+    they take max_i(step_i). Ratio > 1 means collocation wins.
+    """
+    k = len(parallel)
+    t_seq = k * isolated_full.step_s
+    t_par = max(r.step_s for r in parallel)
+    return t_seq / t_par if t_par else 0.0
+
+
+def format_group_table(reports: Sequence[DeviceGroupReport]) -> str:
+    hdr = (
+        f"{'group':<22}{'workload':<16}{'n_inst':>7}"
+        f"{'GRACT':>8}{'SMACT':>8}{'SMOCC':>8}{'DRAMA':>8}  (device-level)"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        d = r.device_metrics
+        lines.append(
+            f"{r.group:<22}{r.workload:<16}{len(r.instance_metrics):>7}"
+            f"{d['gract']:>8.3f}{d['smact']:>8.3f}"
+            f"{d['smocc_proxy']:>8.3f}{d['drama']:>8.3f}"
+        )
+    return "\n".join(lines)

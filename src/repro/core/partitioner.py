@@ -1,0 +1,131 @@
+"""Pod partitioner: MIG placements -> disjoint JAX submeshes.
+
+This is the TPU adaptation of MIG's hardware partitioning (DESIGN.md §2):
+a *slice unit* (the A100 memory-slice granularity that the placement tree is
+defined over) maps to a contiguous block of rows of the pod's chip grid, so
+every instance is a contiguous sub-rectangle. Contiguity is what preserves
+MIG's isolation property on a TPU torus — all ICI hops for an instance's
+collectives stay inside its own rectangle, so instances cannot contend for
+link bandwidth (the analogue of MIG's dedicated memory/SM slices).
+
+Unlike MIG, a TPU sub-rectangle scales compute *and* HBM together (chips are
+the unit of both). Profiles with unequal compute:memory ratios (3g.20gb,
+4g.20gb) keep their paper-faithful placement algebra here, and the scheduler
+accounts for the compute-slice ratio analytically (scheduler.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core.profiles import (
+    N_UNITS,
+    PROFILES,
+    Placement,
+    homogeneous_layout,
+    validate_layout,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceMesh:
+    """One GPU-instance analogue: a placement bound to a device sub-rectangle."""
+
+    placement: Placement
+    mesh: Mesh
+
+    @property
+    def profile(self) -> str:
+        return self.placement.profile
+
+    @property
+    def n_chips(self) -> int:
+        return int(np.prod(self.mesh.devices.shape))
+
+    @property
+    def label(self) -> str:
+        return f"{self.profile}@{self.placement.start}"
+
+
+def device_grid(devices: Optional[Sequence] = None, rows: Optional[int] = None) -> np.ndarray:
+    """Arrange devices into a (rows, cols) grid. Default: squarest grid with
+    rows divisible by N_UNITS when possible, else rows=n (column vector)."""
+    devs = list(devices if devices is not None else jax.devices())
+    n = len(devs)
+    if rows is None:
+        rows = N_UNITS if n % N_UNITS == 0 else n
+    assert n % rows == 0, f"{n} devices not divisible into {rows} rows"
+    return np.array(devs, dtype=object).reshape(rows, n // rows)
+
+
+def rows_per_unit(grid: np.ndarray) -> int:
+    rows = grid.shape[0]
+    assert rows % N_UNITS == 0, (
+        f"grid rows {rows} must be divisible by {N_UNITS} slice units"
+    )
+    return rows // N_UNITS
+
+
+def instance_mesh(
+    grid: np.ndarray,
+    placement: Placement,
+    *,
+    axis_names: Tuple[str, str] = ("data", "model"),
+) -> InstanceMesh:
+    """The contiguous sub-rectangle of ``grid`` owned by ``placement``."""
+    rpu = rows_per_unit(grid)
+    s0, s1 = placement.span
+    block = grid[s0 * rpu : s1 * rpu, :]
+    mesh = Mesh(block, axis_names)
+    return InstanceMesh(placement, mesh)
+
+
+def partition(
+    grid: np.ndarray,
+    placements: Sequence[Placement],
+    *,
+    partitioned: bool = True,
+    axis_names: Tuple[str, str] = ("data", "model"),
+) -> List[InstanceMesh]:
+    """Validate a layout against the placement tree and carve the submeshes."""
+    ok, why = validate_layout(placements, partitioned=partitioned)
+    if not ok:
+        raise ValueError(f"invalid MIG layout: {why}")
+    return [instance_mesh(grid, pl, axis_names=axis_names) for pl in placements]
+
+
+def partition_homogeneous(
+    grid: np.ndarray, profile: str, **kw
+) -> List[InstanceMesh]:
+    """The paper's 'parallel' device group: max instances of one profile."""
+    return partition(grid, homogeneous_layout(profile), **kw)
+
+
+def verify_disjoint(instances: Sequence[InstanceMesh]) -> None:
+    """Isolation precondition: no device may belong to two instances."""
+    seen: Dict[int, str] = {}
+    for inst in instances:
+        for dev in inst.mesh.devices.flat:
+            key = id(dev)
+            if key in seen:
+                raise AssertionError(
+                    f"device {dev} shared by {seen[key]} and {inst.label}"
+                )
+            seen[key] = inst.label
+
+
+def profile_mesh_shape(
+    profile: str, pod_shape: Tuple[int, int] = (16, 16)
+) -> Tuple[int, int]:
+    """Mesh shape an instance of ``profile`` gets on a ``pod_shape`` pod.
+
+    Used by the analytical characterization to dry-run-lower a workload at
+    instance scale without building the full pod grid.
+    """
+    rows, cols = pod_shape
+    rpu = rows // N_UNITS
+    return (PROFILES[profile].mem_units * rpu, cols)

@@ -1,0 +1,397 @@
+"""Blocked causal GQA flash attention — Pallas TPU kernels (fwd + bwd).
+
+TPU adaptation notes (DESIGN.md §2): the CUDA flash-attention algorithm keys
+on warp-level tiling and shared-memory banking; on TPU the same online-
+softmax recurrence is re-tiled for the MXU and VMEM:
+
+  * the G query heads sharing one KV head are FOLDED into the row dim of the
+    q tile, so the score matmul is a single (Bq*G, D) x (D, Bk) MXU op —
+    GQA comes for free instead of a per-head loop;
+  * the grid is (B, KVH, nq, nk) with the KV dim innermost: TPU grid
+    execution is sequential over the last axis, so the f32 accumulator and
+    the online-softmax stats (m, l) live in VMEM scratch across the KV
+    sweep of each q tile — the HBM traffic is exactly one read of q/k/v and
+    one write of o per tile;
+  * softmax stats are kept as (rows, 128) lane-replicated tiles (VREG-
+    friendly broadcast instead of (rows, 1) relayouts);
+  * causal q-tiles skip fully-masked KV tiles via ``pl.when`` on the grid
+    index (≈2x fewer MXU ops at long seq).
+
+Backward follows the two-kernel FlashAttention-2 schedule: a dk/dv kernel
+with the q dim innermost, and a dq kernel with the KV dim innermost; both
+recompute p from (q, k, lse) so no S x S tensor ever exists.
+
+Validated against ``ref.mha_reference`` in interpret mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128  # stat tiles are lane-replicated to this width
+
+
+def _row_positions(block_q: int, g: int, iq, q_offset: int):
+    """Absolute q position of each folded (q, g) row: row -> q index."""
+    rows = block_q * g
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    return q_offset + iq * block_q + r // g  # (rows, 1)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(
+    q_ref,  # (1, 1, Bq, G, D)
+    k_ref,  # (1, 1, Bk, D)
+    v_ref,  # (1, 1, Bk, D)
+    o_ref,  # (1, 1, Bq, G, D)
+    lse_ref,  # (1, 1, Bq, G)
+    acc,  # VMEM (Bq*G, D) f32
+    m,  # VMEM (Bq*G, LANES) f32
+    l,  # VMEM (Bq*G, LANES) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    g: int,
+    kv_valid: int,
+    q_offset: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+    rows = block_q * g
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m[...] = jnp.full_like(m, NEG_INF)
+        l[...] = jnp.zeros_like(l)
+
+    # causal: skip KV tiles strictly above the diagonal of this q tile
+    q_hi = q_offset + (iq + 1) * block_q - 1  # last q position in tile
+    live = (ik * block_k <= q_hi) if causal else (ik >= 0)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].reshape(rows, q_ref.shape[-1]).astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+        s = jax.lax.dot_general(
+            q * scale, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (rows, Bk)
+
+        kv_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_k), 1
+        )
+        mask = kv_pos < kv_valid
+        if causal:
+            mask &= _row_positions(block_q, g, iq, q_offset) >= kv_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m[:, :1]  # (rows, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (rows, Bk)
+        corr = jnp.exp(m_prev - m_new)  # (rows, 1)
+        l_new = l[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m[...] = jnp.broadcast_to(m_new, m.shape)
+        l[...] = jnp.broadcast_to(l_new, l.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        lsum = l[:, :1]
+        out = acc[...] / jnp.maximum(lsum, 1e-30)
+        o_ref[0, 0] = out.reshape(o_ref.shape[2:]).astype(o_ref.dtype)
+        lse = (m[:, :1] + jnp.log(jnp.maximum(lsum, 1e-30))).reshape(
+            block_q, g
+        )
+        lse_ref[0, 0] = lse
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (B, KVH, Sq, G, D)
+    k: jax.Array,  # (B, KVH, Skv, D)
+    v: jax.Array,  # (B, KVH, Skv, D)
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (o (B,KVH,Sq,G,D), lse (B,KVH,Sq,G) f32)."""
+    B, KVH, Sq, G, D = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq = -(-Sq // block_q)
+    nk = -(-Skv // block_k)
+    if Sq % block_q or Skv % block_k:
+        raise ValueError(f"seq ({Sq},{Skv}) must divide blocks ({block_q},{block_k})")
+
+    grid = (B, KVH, nq, nk)
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        g=G,
+        kv_valid=Skv,
+        q_offset=q_offset,
+    )
+    rows = block_q * G
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, iq, ik: (b, h, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, iq, ik: (b, h, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, G), lambda b, h, iq, ik: (b, h, iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KVH, Sq, G, D), q.dtype),
+            jax.ShapeDtypeStruct((B, KVH, Sq, G), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, D), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# backward: dk/dv kernel (q innermost), dq kernel (kv innermost)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dkv_kernel(
+    q_ref,  # (1, 1, Bq, G, D)
+    k_ref,  # (1, 1, Bk, D)
+    v_ref,  # (1, 1, Bk, D)
+    do_ref,  # (1, 1, Bq, G, D)
+    lse_ref,  # (1, 1, Bq, G)
+    delta_ref,  # (1, 1, Bq, G)
+    dk_ref,  # (1, 1, Bk, D)
+    dv_ref,  # (1, 1, Bk, D)
+    dk_acc,  # VMEM (Bk, D) f32
+    dv_acc,  # VMEM (Bk, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    g: int,
+    kv_valid: int,
+    q_offset: int,
+):
+    ik, iq = pl.program_id(2), pl.program_id(3)
+    nq = pl.num_programs(3)
+    rows = block_q * g
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_hi = q_offset + (iq + 1) * block_q - 1
+    live = (ik * block_k <= q_hi) if causal else (ik >= 0)
+
+    @pl.when(live)
+    def _compute():
+        D = q_ref.shape[-1]
+        q = q_ref[0, 0].reshape(rows, D).astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].reshape(rows, D).astype(jnp.float32)
+        lse = lse_ref[0, 0].reshape(rows, 1)
+        delta = delta_ref[0, 0].reshape(rows, 1)
+
+        s = jax.lax.dot_general(
+            q * scale, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        kv_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_k), 1
+        )
+        mask = kv_pos < kv_valid
+        if causal:
+            mask &= _row_positions(block_q, g, iq, q_offset) >= kv_pos
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse)  # (rows, Bk) — true softmax probs
+        # dv += p^T @ do
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        # ds = p * (do @ v^T - delta); dk += ds^T @ q * scale
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta)
+        dk_acc[...] += scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(iq == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(
+    q_ref,  # (1, 1, Bq, G, D)
+    k_ref,  # (1, 1, Bk, D)
+    v_ref,  # (1, 1, Bk, D)
+    do_ref,  # (1, 1, Bq, G, D)
+    lse_ref,  # (1, 1, Bq, G)
+    delta_ref,  # (1, 1, Bq, G)
+    dq_ref,  # (1, 1, Bq, G, D)
+    dq_acc,  # VMEM (Bq*G, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    g: int,
+    kv_valid: int,
+    q_offset: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+    rows = block_q * g
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_hi = q_offset + (iq + 1) * block_q - 1
+    live = (ik * block_k <= q_hi) if causal else (ik >= 0)
+
+    @pl.when(live)
+    def _compute():
+        D = q_ref.shape[-1]
+        q = q_ref[0, 0].reshape(rows, D).astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].reshape(rows, D).astype(jnp.float32)
+        lse = lse_ref[0, 0].reshape(rows, 1)
+        delta = delta_ref[0, 0].reshape(rows, 1)
+
+        s = jax.lax.dot_general(
+            q * scale, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        kv_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_k), 1
+        )
+        mask = kv_pos < kv_valid
+        if causal:
+            mask &= _row_positions(block_q, g, iq, q_offset) >= kv_pos
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta)
+        dq_acc[...] += scale * jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].reshape(dq_ref.shape[2:]).astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, o, lse, do,
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+):
+    """Returns (dq, dk, dv) with the layouts of (q, k, v)."""
+    B, KVH, Sq, G, D = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq, nk = Sq // block_q, Skv // block_k
+
+    # delta[b,h,t,g] = sum_d do * o — the rowwise correction term
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)
+
+    common = dict(
+        scale=scale, causal=causal, block_q=block_q, block_k=block_k,
+        g=G, kv_valid=Skv, q_offset=q_offset,
+    )
+    rows = block_q * G
+
+    dkv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **common),
+        grid=(B, KVH, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, ik, iq: (b, h, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, ik, iq: (b, h, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, G), lambda b, h, ik, iq: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q, G), lambda b, h, ik, iq: (b, h, iq, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, iq: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik, iq: (b, h, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **common),
+        grid=(B, KVH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, iq, ik: (b, h, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, iq, ik: (b, h, iq, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, G), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q, G), lambda b, h, iq, ik: (b, h, iq, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, G, D), lambda b, h, iq, ik: (b, h, iq, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)],
+        scratch_shapes=[pltpu.VMEM((rows, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)[0]
+
+    return dq, dkv[0], dkv[1]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (shape/dtype
+sweeps with assert_allclose under ``interpret=True``). They are deliberately
+naive — O(S^2) attention materializing the score matrix, token-by-token WKV
+recurrence — because clarity is the point of an oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KVH, D)
+    v: jax.Array,  # (B, Skv, KVH, D)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive GQA attention: full (Sq, Skv) score matrix, f32 softmax."""
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = D**-0.5 if scale is None else scale
+    qf = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k.astype(jnp.float32))
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = q_pos[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_reference(
+    q: jax.Array,  # (B, H, D) single query token
+    k_cache: jax.Array,  # (B, Smax, KVH, D)
+    v_cache: jax.Array,  # (B, Smax, KVH, D)
+    *,
+    kv_len: jax.Array | int,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode attention against a (masked) KV cache."""
+    B, H, D = q.shape
+    _, Smax, KVH, _ = k_cache.shape
+    G = H // KVH
+    scale = D**-0.5 if scale is None else scale
+    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(Smax)
+    s = jnp.where(pos[None, None, None, :] < kv_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def wkv6_reference(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,  # (B, T, H, K)
+    v: jax.Array,  # (B, T, H, V)
+    logw: jax.Array,  # (B, T, H, K) log-decay <= 0
+    u: jax.Array,  # (H, K) bonus
+    state0: jax.Array,  # (B, H, K, V)
+):
+    """Token-by-token WKV6 recurrence (RWKV-6 'Finch'):
+
+        o_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)
+        S_t = diag(exp(logw_t)) S_{t-1} + k_t v_t^T
+
+    Returns (out (B,T,H,V) f32, final state (B,H,K,V) f32).
+    """
+    rf = r.astype(jnp.float32).swapaxes(0, 1)  # (T, B, H, K)
+    kf = k.astype(jnp.float32).swapaxes(0, 1)
+    vf = v.astype(jnp.float32).swapaxes(0, 1)
+    wf = logw.astype(jnp.float32).swapaxes(0, 1)
+    uf = u.astype(jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs  # (B,H,K/V)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = jnp.exp(wt)[..., None] * S + kv
+        return S, out
+
+    state, outs = jax.lax.scan(step, state0.astype(jnp.float32), (rf, kf, vf, wf))
+    return outs.swapaxes(0, 1), state

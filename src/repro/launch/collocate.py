@@ -1,0 +1,147 @@
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=256"
+    ).strip()
+
+"""Collocation characterization driver — the paper's §3.4 experiment matrix.
+
+For every (workload x device-group) cell of the paper's grid this lowers and
+compiles the job's real train step on the instance's carved sub-mesh,
+derives step-time roofline + DCGM analogues + memory admission, verifies the
+isolation properties (core/interference.py), and writes one JSON artifact
+per cell to ``artifacts/collocation/``. The benchmarks (time_per_epoch,
+collocation_throughput, utilization, memory_footprint) read these artifacts
+and print the paper-table reproductions.
+
+The 256 placeholder devices stand in for one 16x16 v5e pod; instances are
+contiguous row-blocks of the grid (32 chips per slice unit).
+
+Usage:
+  python -m repro.launch.collocate [--workloads resnet_small,...]
+                                   [--suite paper_train] [--out artifacts/collocation]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ShapeSuite
+from repro.core import interference
+from repro.core.collocation import paper_experiment_grid
+from repro.core.instance import InstanceRuntime, JobSpec
+from repro.core.metrics import (
+    collocation_speedup,
+    device_group_report,
+    epoch_time_s,
+)
+from repro.core.partitioner import device_grid, partition
+from repro.core.profiles import PROFILES
+
+# The paper's workloads: batch 32 everywhere (§3.4); epoch sizes from the
+# datasets (CIFAR-10 45k train / ImageNet64 1.28M / ImageNet 1.28M).
+PAPER_SUITES = {
+    "resnet_small": (ShapeSuite("paper_small", 32 * 32, 32, "train"), 45_000),
+    "resnet_medium": (ShapeSuite("paper_medium", 64 * 64, 32, "train"), 1_281_167),
+    "resnet_large": (ShapeSuite("paper_large", 224 * 224, 32, "train"), 1_281_167),
+}
+# LM workloads reuse the assigned shape suites (collocation is arch-agnostic).
+LM_SUITE = ShapeSuite("train_4k", 4096, 256, "train")
+
+
+def run_cell(workload: str, group: str, placements, grid, suite, samples, out_dir):
+    """One device-group cell: characterize each instance, verify isolation."""
+    partitioned = group != "non-MIG"
+    instances = partition(grid, placements, partitioned=partitioned)
+    records = []
+    hlo_texts = {}
+    t0 = time.time()
+    for i, inst in enumerate(instances):
+        rt = InstanceRuntime(inst, partitioned=partitioned)
+        job = JobSpec(name=f"{workload}#{i}", arch=workload, suite=suite)
+        rec = rt.characterize(job)
+        records.append(rec)
+    iso = interference.verify_isolation(instances, records, hlo_texts or None)
+    group_rep = device_group_report(group, workload, records)
+    cell = {
+        "workload": workload,
+        "group": group,
+        "status": "OK",
+        "t_wall_s": round(time.time() - t0, 1),
+        "suite": suite.name,
+        "samples_per_epoch": samples,
+        "records": [r.to_dict() for r in records],
+        "epoch_time_s": [epoch_time_s(r, samples, suite.global_batch) for r in records],
+        "device_group": group_rep.to_dict(),
+        "isolation": dataclasses.asdict(iso),
+    }
+    label = f"{workload}__{group.replace(' ', '_').replace('.', '_')}"
+    (out_dir / f"{label}.json").write_text(json.dumps(cell, indent=2))
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--workloads",
+        default="resnet_small,resnet_medium,resnet_large",
+        help="comma-separated registry keys",
+    )
+    ap.add_argument("--out", default="artifacts/collocation")
+    ap.add_argument("--lm-suite", action="store_true",
+                    help="use train_4k for non-resnet workloads")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    workloads = args.workloads.split(",")
+
+    grid = device_grid(rows=16)  # 16x16 pod; 2 rows per slice unit
+
+    results = []
+    failures = 0
+    # isolated full-device reference for F2 speedup
+    full_rec = {}
+    for w in workloads:
+        suite, samples = PAPER_SUITES.get(w, (LM_SUITE, 1_281_167))
+        for w2, group, placements in paper_experiment_grid([w], suite):
+            try:
+                cell = run_cell(w, group, placements, grid, suite, samples, out_dir)
+                results.append(cell)
+                recs = cell["records"]
+                if group == "7g.40gb one":
+                    full_rec[w] = recs[0]
+                speed = ""
+                if "parallel" in group and w in full_rec:
+                    from repro.core.instance import InstanceRecord
+
+                    par = [InstanceRecord(**r) for r in recs]
+                    iso_full = InstanceRecord(**full_rec[w])
+                    speed = f" collocation_speedup={collocation_speedup(par, iso_full):.2f}x"
+                print(
+                    f"[OK]   {w:<16} {group:<18} inst={len(recs)} "
+                    f"step={recs[0]['step_s']:.4f}s fits={all(r['fits'] for r in recs)}"
+                    f" iso={cell['isolation']['disjoint']}" + speed,
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"[FAIL] {w} {group}: {e}", flush=True)
+                traceback.print_exc(limit=3)
+    summary = {
+        "cells": len(results),
+        "failures": failures,
+    }
+    (out_dir / "_summary.json").write_text(json.dumps(summary, indent=2))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+For each cell this lowers the real step function (train_step for train
+shapes; prefill/decode steps for serving shapes) with full GSPMD shardings,
+compiles it, and records:
+  * memory_analysis()  — per-device bytes (fits-in-HBM proof)
+  * cost_analysis()    — per-device HLO FLOPs / bytes accessed
+  * collective summary — parsed from optimized HLO, scan-multiplied,
+                         ring-cost weighted (telemetry/hlo.py)
+  * the roofline report (telemetry/roofline.py)
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json and
+feed EXPERIMENTS.md §Dry-run/§Roofline and the hillclimb.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--tag baseline]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES_BY_NAME, ShapeSuite, shape_applicable
+from repro.configs.registry import ASSIGNED, get_config
+from repro.launch.lowering import active_params, lower_cell
+from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_label
+from repro.telemetry import roofline as rl
+from repro.telemetry.hlo import collective_summary, hlo_flops_bytes
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path, tag: str = "",
+             grad_accum: int = 1, variant: str = "baseline",
+             remat: bool | None = None, mesh_spec: str = "") -> dict:
+    suite = SHAPES_BY_NAME[shape]
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, suite)
+    label = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    if not ok:
+        rec = {"cell": label, "status": "SKIP", "reason": why}
+        (out_dir / f"{label}.json").write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    if mesh_spec:
+        dims = tuple(int(x) for x in mesh_spec.split("x"))
+        names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+        from repro.launch.mesh import make_mesh_shape
+
+        mesh = make_mesh_shape(dims, names)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg, model, lowered = lower_cell(arch, suite, mesh, grad_accum=grad_accum,
+                                     variant=variant, remat=remat)
+    t_lower = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_summary(hlo_text)
+    # loop-aware flops/bytes (cost_analysis counts while bodies once — a
+    # ~n_layers undercount for scan-over-depth programs)
+    est = hlo_flops_bytes(hlo_text)
+
+    chips = mesh_chips(mesh)
+    n_total = model.param_count()
+    n_active = active_params(cfg, n_total)
+    peak_mem = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes
+        + mem.temp_size_in_bytes
+    )
+    report = rl.RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_label(mesh),
+        chips=chips,
+        flops_per_device=float(est["flops"]),
+        hbm_bytes_per_device=float(est["bytes"]),
+        wire_bytes_per_device=float(coll["per_device_wire_bytes"]),
+        model_flops_global=rl.model_flops(cfg, suite, n_active),
+        peak_mem_bytes_per_device=float(peak_mem),
+        collective_detail={k: coll[k] for k in ("by_kind", "top_ops", "n_collective_sites")},
+    )
+    rec = {
+        "cell": label,
+        "status": "OK",
+        "grad_accum": grad_accum,
+        "variant": variant,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "n_params_total": n_total,
+        "n_params_active": n_active,
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": peak_mem,
+        },
+        "dcgm_analogues": rl.dcgm_analogues(report),
+        "roofline": report.to_dict(),
+    }
+    (out_dir / f"{label}.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ASSIGNED), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES_BY_NAME), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--variant", default="baseline",
+                    choices=("baseline", "sp", "zero", "serve"))
+    ap.add_argument("--remat", default="default", choices=("default", "on", "off"))
+    ap.add_argument("--mesh-spec", default="",
+                    help="logical reshape of the pod, e.g. 64x4 (data x model);"
+                         " same 256 chips, different axis split (perf variant)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES_BY_NAME:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all) required"
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    failures = 0
+    for arch, shape, mk in cells:
+        try:
+            remat = {"default": None, "on": True, "off": False}[args.remat]
+            rec = run_cell(arch, shape, mk, out_dir, args.tag, args.grad_accum,
+                           args.variant, remat, args.mesh_spec)
+            if rec["status"] == "OK":
+                r = rec["roofline"]
+                print(
+                    f"[OK]   {rec['cell']}: compute={r['compute_s']:.4f}s "
+                    f"memory={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                    f"bound={r['bound']} mem/dev={r['peak_mem_bytes_per_device']/2**30:.2f}GiB "
+                    f"(compile {rec['t_compile_s']}s)",
+                    flush=True,
+                )
+            else:
+                print(f"[SKIP] {rec['cell']}: {rec['reason']}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            failures += 1
+            label = f"{arch}__{shape}__{mk}"
+            (out_dir / f"{label}.json").write_text(
+                json.dumps({"cell": label, "status": "FAIL", "error": str(e)[:2000],
+                            "traceback": traceback.format_exc()[-4000:]}, indent=2)
+            )
+            print(f"[FAIL] {label}: {e}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Mesh-agnostic lowering helpers shared by the dry-run, the collocation
+characterizer, and the benchmarks. No environment side effects — safe to
+import from anywhere (unlike ``dryrun``, which pins XLA_FLAGS first thing).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ShapeSuite
+from repro.configs.registry import get_config
+from repro.models.model_api import build_model
+from repro.optim import adamw
+from repro.runtime import serve_step as serve
+from repro.runtime import train_step as ts
+
+
+def active_params(cfg, total: int) -> int:
+    """Params touched per token (MoE: shared + top_k routed experts only)."""
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    inactive_experts = m.n_experts - m.top_k
+    per_expert = 3 * cfg.d_model * m.d_expert
+    return total - cfg.n_layers * inactive_experts * per_expert
+
+
+def lower_cell(arch: str, suite: ShapeSuite, mesh, *, grad_accum: int = 1,
+               variant: str = "baseline", remat: bool | None = None):
+    """Lower the real step function for (arch, suite) on ``mesh``.
+
+    train shapes -> train_step (fwd+bwd+optimizer);
+    prefill shapes -> prefill step; decode shapes -> one-token decode step.
+    Returns (cfg, model, lowered). ``remat=None`` keeps the config default.
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = _dc.replace(cfg, remat=remat)
+    model = build_model(cfg)
+    if suite.kind == "train":
+        jitted, st_sh, b_sh, plan = ts.jit_train_step(
+            model, mesh, suite, adamw.AdamWConfig(), grad_accum=grad_accum,
+            variant=variant,
+        )
+        state_shape = jax.eval_shape(
+            lambda k: ts.init_train_state(model, k, adamw.AdamWConfig()),
+            jax.random.key(0),
+        )
+        batch_shape = model.input_specs(suite)
+        lowered = jitted.lower(state_shape, batch_shape)
+    elif suite.kind == "prefill":
+        jitted, p_sh, b_sh, plan = serve.jit_prefill_step(model, mesh, suite, variant=variant)
+        params_shape = jax.eval_shape(model.init, jax.random.key(0))
+        batch_shape = model.input_specs(suite)
+        lowered = jitted.lower(params_shape, batch_shape)
+    else:  # decode
+        jitted, p_sh, tok_sh, c_sh, plan = serve.jit_decode_step(model, mesh, suite, variant=variant)
+        params_shape = jax.eval_shape(model.init, jax.random.key(0))
+        batch_shape = model.input_specs(suite)
+        cache_shape = model.cache_spec(suite.global_batch, suite.seq_len)
+        lowered = jitted.lower(params_shape, batch_shape, cache_shape)
+    return cfg, model, lowered
+
+
+# alias used by core/instance.py
+lower_cell_on_mesh = lower_cell

@@ -1,0 +1,304 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings of shape (B, n_frames, d_model) standing in for
+the two-conv mel frontend; the backbone (encoder self-attn, decoder
+self+cross attn, gelu MLPs, layernorm, learned decoder positions) is real.
+Depth runs under ``lax.scan`` like every other family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSuite
+from repro.models import losses
+from repro.models import module as nn
+from repro.models import transformer as tfm
+from repro.models.attention import decode_attention, flash_attention as xla_flash_attention
+from repro.models.model_api import Model, _input_specs, register_family
+from repro.sharding.plan import ShardingPlan
+
+Params = Dict[str, Any]
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal positions, (length, channels) f32."""
+    log_timescale = jnp.log(10_000.0) / (channels // 2 - 1)
+    inv_timescales = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv_timescales[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_mha(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Whisper MHA: bias on q/v/o, none on k."""
+    kg = nn.KeyGen(key)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": nn.fan_in_init(kg(), (d, cfg.n_heads * hd), jnp.bfloat16),
+        "bq": jnp.zeros((cfg.n_heads * hd,), jnp.bfloat16),
+        "wk": nn.fan_in_init(kg(), (d, cfg.n_kv_heads * hd), jnp.bfloat16),
+        "wv": nn.fan_in_init(kg(), (d, cfg.n_kv_heads * hd), jnp.bfloat16),
+        "bv": jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16),
+        "wo": nn.fan_in_init(kg(), (cfg.n_heads * hd, d), jnp.bfloat16),
+        "bo": jnp.zeros((d,), jnp.bfloat16),
+    }
+
+
+def _init_mlp(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    return {
+        "w_up": nn.fan_in_init(kg(), (cfg.d_model, cfg.d_ff), jnp.bfloat16),
+        "b_up": jnp.zeros((cfg.d_ff,), jnp.bfloat16),
+        "w_down": nn.fan_in_init(kg(), (cfg.d_ff, cfg.d_model), jnp.bfloat16),
+        "b_down": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+    }
+
+
+def _init_enc_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    return {
+        "attn_norm": nn.layernorm_init(cfg.d_model),
+        "attn": _init_mha(cfg, kg()),
+        "mlp_norm": nn.layernorm_init(cfg.d_model),
+        "mlp": _init_mlp(cfg, kg()),
+    }
+
+
+def _init_dec_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    return {
+        "self_norm": nn.layernorm_init(cfg.d_model),
+        "self_attn": _init_mha(cfg, kg()),
+        "cross_norm": nn.layernorm_init(cfg.d_model),
+        "cross_attn": _init_mha(cfg, kg()),
+        "mlp_norm": nn.layernorm_init(cfg.d_model),
+        "mlp": _init_mlp(cfg, kg()),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    return {
+        # stub frontend projection: frame embeddings -> model space
+        "frame_proj": {
+            "w_in": nn.fan_in_init(kg(), (cfg.d_model, cfg.d_model), jnp.bfloat16)
+        },
+        "enc_layers": nn.stack_layer_init(
+            functools.partial(_init_enc_block, cfg), kg(), cfg.enc_layers
+        ),
+        "enc_norm": nn.layernorm_init(cfg.d_model),
+        "embed": nn.embedding_init(kg(), cfg.padded_vocab, cfg.d_model),
+        "dec_pos": {
+            "table": nn.trunc_normal(
+                kg(), (cfg.max_dec_pos, cfg.d_model), 0.01, jnp.bfloat16
+            )
+        },
+        "dec_layers": nn.stack_layer_init(
+            functools.partial(_init_dec_block, cfg), kg(), cfg.n_layers
+        ),
+        "final_norm": nn.layernorm_init(cfg.d_model),
+        # whisper ties the output head to the token embedding
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _mha_qkv(cfg: ModelConfig, p: Params, xq, xkv, plan: ShardingPlan):
+    Bq, Sq, _ = xq.shape
+    _, Skv, _ = xkv.shape
+    hd = cfg.resolved_head_dim
+    q = nn.dense_apply({"w": p["wq"], "b": p["bq"]}, xq)
+    k = nn.dense_apply({"w": p["wk"]}, xkv)
+    v = nn.dense_apply({"w": p["wv"], "b": p["bv"]}, xkv)
+    q = plan.act(q.reshape(Bq, Sq, cfg.n_heads, hd), "heads")
+    k = plan.act(k.reshape(Bq, Skv, cfg.n_kv_heads, hd), "kv_heads")
+    v = plan.act(v.reshape(Bq, Skv, cfg.n_kv_heads, hd), "kv_heads")
+    return q, k, v
+
+
+def _mha_out(p: Params, out: jax.Array, B: int, S: int) -> jax.Array:
+    return nn.dense_apply({"w": p["wo"], "b": p["bo"]}, out.reshape(B, S, -1))
+
+
+def _mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = nn.dense_apply({"w": p["w_up"], "b": p["b_up"]}, x)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return nn.dense_apply({"w": p["w_down"], "b": p["b_down"]}, h)
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array, plan: ShardingPlan):
+    """frames: (B, T, d) stub embeddings -> encoder states (B, T, d)."""
+    B, T, _ = frames.shape
+    h = nn.dense_apply({"w": params["frame_proj"]["w_in"]}, frames.astype(jnp.bfloat16))
+    h = h + sinusoids(T, cfg.d_model).astype(h.dtype)[None]
+    h = plan.act(h, "frames")
+
+    def body(x, lp):
+        xn = nn.layernorm_apply(lp["attn_norm"], x)
+        q, k, v = _mha_qkv(cfg, lp["attn"], xn, xn, plan)
+        out = xla_flash_attention(q, k, v, causal=False, block_k=cfg.attn_block_k)
+        x = x + _mha_out(lp["attn"], out, B, T)
+        x = x + _mlp(lp["mlp"], nn.layernorm_apply(lp["mlp_norm"], x))
+        return plan.act(x, "frames")
+
+    h = nn.scan_layers(body, h, params["enc_layers"], remat=cfg.remat)
+    return nn.layernorm_apply(params["enc_norm"], h)
+
+
+def _dec_block(cfg, plan, enc_out, B, S, x, lp, positions):
+    xn = nn.layernorm_apply(lp["self_norm"], x)
+    q, k, v = _mha_qkv(cfg, lp["self_attn"], xn, xn, plan)
+    out = xla_flash_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    x = x + _mha_out(lp["self_attn"], out, B, S)
+    xn = nn.layernorm_apply(lp["cross_norm"], x)
+    q, k, v = _mha_qkv(cfg, lp["cross_attn"], xn, enc_out, plan)
+    out = xla_flash_attention(q, k, v, causal=False, block_k=cfg.attn_block_k)
+    x = x + _mha_out(lp["cross_attn"], out, B, S)
+    x = x + _mlp(lp["mlp"], nn.layernorm_apply(lp["mlp_norm"], x))
+    return plan.act(x, "hidden")
+
+
+def _dec_embed(cfg, params, tokens, plan, offset: int = 0):
+    B, S = tokens.shape
+    h = nn.embedding_apply(params["embed"], tokens)
+    pos = jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"]["table"], offset, S, axis=0
+    )
+    return plan.act(h + pos[None].astype(h.dtype), "hidden")
+
+
+def _logits(cfg, params, h, plan):
+    h = nn.layernorm_apply(params["final_norm"], h)
+    w = params["embed"]["table"].astype(jnp.bfloat16)
+    return tfm.mask_pad_logits(cfg, jnp.einsum("...d,vd->...v", h, w))
+
+
+def forward(cfg: ModelConfig, params: Params, frames, tokens, plan: ShardingPlan):
+    enc_out = encode(cfg, params, frames, plan)
+    B, S = tokens.shape
+    h = _dec_embed(cfg, params, tokens, plan)
+    body = functools.partial(_dec_block, cfg, plan, enc_out, B, S)
+    h = nn.scan_layers(
+        lambda x, lp: body(x, lp, None), h, params["dec_layers"], remat=cfg.remat
+    )
+    return plan.act(_logits(cfg, params, h, plan), "logits")
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    self_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    cross_shape = (cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(self_shape, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(self_shape, jnp.bfloat16),
+        "xk": jax.ShapeDtypeStruct(cross_shape, jnp.bfloat16),
+        "xv": jax.ShapeDtypeStruct(cross_shape, jnp.bfloat16),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, frames, tokens, plan: ShardingPlan):
+    enc_out = encode(cfg, params, frames, plan)
+    B, S = tokens.shape
+    T = enc_out.shape[1]
+    h = _dec_embed(cfg, params, tokens, plan)
+
+    def body(x, lp):
+        xn = nn.layernorm_apply(lp["self_norm"], x)
+        q, k, v = _mha_qkv(cfg, lp["self_attn"], xn, xn, plan)
+        out = xla_flash_attention(q, k, v, causal=True, block_k=cfg.attn_block_k)
+        x = x + _mha_out(lp["self_attn"], out, B, S)
+        xn = nn.layernorm_apply(lp["cross_norm"], x)
+        qx, xk, xv = _mha_qkv(cfg, lp["cross_attn"], xn, enc_out, plan)
+        out = xla_flash_attention(qx, xk, xv, causal=False, block_k=cfg.attn_block_k)
+        x = x + _mha_out(lp["cross_attn"], out, B, S)
+        x = x + _mlp(lp["mlp"], nn.layernorm_apply(lp["mlp_norm"], x))
+        x = plan.act(x, "hidden")
+        kv = (
+            k.astype(jnp.bfloat16),
+            v.astype(jnp.bfloat16),
+            xk.astype(jnp.bfloat16),
+            xv.astype(jnp.bfloat16),
+        )
+        return x, kv
+
+    h, (ks, vs, xks, xvs) = jax.lax.scan(body, h, params["dec_layers"])
+    cache = {
+        "k": plan.act(ks, "cache"),
+        "v": plan.act(vs, "cache"),
+        "xk": plan.act(xks, "cache"),
+        "xv": plan.act(xvs, "cache"),
+    }
+    last = _logits(cfg, params, h[:, -1:, :], plan)[:, 0, :]
+    return plan.act(last, "last_logits"), cache
+
+
+def decode_step(cfg, params, token, cache, pos, plan: ShardingPlan):
+    B = token.shape[0]
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    h = nn.embedding_apply(params["embed"], token[:, None])
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"]["table"], pos_arr, 1, 0)
+    h = plan.act(h + pos_emb[None].astype(h.dtype), "decode_hidden")
+
+    def body(x, layer_in):
+        lp, kc, vc, xk, xv = layer_in
+        xn = nn.layernorm_apply(lp["self_norm"], x)
+        q, k, v = _mha_qkv(cfg, lp["self_attn"], xn, xn, plan)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos_arr, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos_arr, 1)
+        out = decode_attention(q, kc, vc, kv_len=pos_arr + 1)
+        x = x + _mha_out(lp["self_attn"], out, B, 1)
+        xn = nn.layernorm_apply(lp["cross_norm"], x)
+        hd = cfg.resolved_head_dim
+        qx = nn.dense_apply(
+            {"w": lp["cross_attn"]["wq"], "b": lp["cross_attn"]["bq"]}, xn
+        ).reshape(B, 1, cfg.n_heads, hd)
+        out = decode_attention(qx, xk, xv, kv_len=xk.shape[1])
+        x = x + _mha_out(lp["cross_attn"], out, B, 1)
+        x = x + _mlp(lp["mlp"], nn.layernorm_apply(lp["mlp_norm"], x))
+        return plan.act(x, "decode_hidden"), (kc, vc)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    logits = _logits(cfg, params, h, plan)[:, 0, :]
+    new_cache = dict(cache, k=plan.act(k_new, "cache"), v=plan.act(v_new, "cache"))
+    return plan.act(logits, "last_logits"), new_cache
+
+
+@register_family("encdec")
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def loss(params, batch, plan: ShardingPlan):
+        logits = forward(cfg, params, batch["frames"], batch["tokens"], plan)
+        return losses.softmax_cross_entropy(logits, batch["labels"])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: init_params(cfg, key),
+        loss=loss,
+        prefill=lambda params, batch, plan: prefill(
+            cfg, params, batch["frames"], batch["tokens"], plan
+        ),
+        decode=lambda params, batch, cache, pos, plan: decode_step(
+            cfg, params, batch["token"], cache, pos, plan
+        ),
+        cache_spec=lambda b, s: cache_spec(cfg, b, s),
+        input_specs=lambda suite: _input_specs(cfg, suite),
+    )

@@ -1,0 +1,45 @@
+"""Loss functions shared across families."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    z_loss: float = 1e-4,
+    label_smoothing: float = 0.0,
+    mask: jax.Array | None = None,
+):
+    """Mean next-token CE over (B, S, V) logits and (B, S) int labels.
+
+    f32 log-softmax for stability; optional z-loss regularizer (production
+    stabilizer for large-vocab training) and label smoothing. Returns
+    (loss, metrics-dict).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)  # (B,S)
+    label_logit = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    if label_smoothing > 0.0:
+        smooth = lse - jnp.mean(lf, axis=-1)
+        nll = (1.0 - label_smoothing) * nll + label_smoothing * smooth
+    zl = jnp.square(lse)
+    if mask is None:
+        denom = nll.size
+        loss = jnp.sum(nll) / denom
+        zterm = jnp.sum(zl) / denom
+    else:
+        m = mask.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(m), 1.0)
+        loss = jnp.sum(nll * m) / denom
+        zterm = jnp.sum(zl * m) / denom
+    total = loss + z_loss * zterm
+    acc_pred = jnp.argmax(lf, axis=-1) == labels
+    if mask is not None:
+        acc = jnp.sum(acc_pred * mask) / denom
+    else:
+        acc = jnp.mean(acc_pred.astype(jnp.float32))
+    return total, {"ce": loss, "z_loss": zterm, "accuracy": acc}

@@ -1,0 +1,230 @@
+"""Minimal functional module substrate.
+
+No flax/haiku dependency: parameters are nested dicts (pytrees) of jnp arrays,
+built by pure ``init`` functions and consumed by pure ``apply`` functions.
+Stacked-layer parameters carry a leading ``L`` dim and are consumed with
+``jax.lax.scan`` so the lowered HLO stays O(1) in depth — essential for the
+512-device dry-run compiles of 80-layer configs on a single-core host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+PRNGKey = jax.Array
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Mixed-precision policy: params/compute in bf16, reductions in f32."""
+
+    param_dtype: jnp.dtype = jnp.bfloat16
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    reduce_dtype: jnp.dtype = jnp.float32
+
+
+DEFAULT_POLICY = DtypePolicy()
+F32_POLICY = DtypePolicy(jnp.float32, jnp.float32, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key: PRNGKey, shape: Sequence[int], std: float, dtype) -> jax.Array:
+    """Truncated-normal(±2σ) initializer (the common transformer default)."""
+    unscaled = jax.random.truncated_normal(key, -2.0, 2.0, tuple(shape), jnp.float32)
+    return (unscaled * std).astype(dtype)
+
+
+def fan_in_init(key: PRNGKey, shape: Sequence[int], dtype, scale: float = 1.0) -> jax.Array:
+    """LeCun-style fan-in init for (in, out)-shaped kernels."""
+    fan_in = shape[0] if len(shape) >= 2 else max(int(np.prod(shape)), 1)
+    std = scale / math.sqrt(max(fan_in, 1))
+    return trunc_normal(key, shape, std, dtype)
+
+
+def zeros_init(_key: PRNGKey, shape: Sequence[int], dtype) -> jax.Array:
+    return jnp.zeros(tuple(shape), dtype)
+
+
+def ones_init(_key: PRNGKey, shape: Sequence[int], dtype) -> jax.Array:
+    return jnp.ones(tuple(shape), dtype)
+
+
+class KeyGen:
+    """Splitting helper so init code reads linearly."""
+
+    def __init__(self, key: PRNGKey):
+        self._key = key
+
+    def __call__(self) -> PRNGKey:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# primitive layers (init + apply pairs)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(
+    key: PRNGKey,
+    d_in: int,
+    d_out: int,
+    *,
+    dtype=jnp.bfloat16,
+    bias: bool = False,
+    scale: float = 1.0,
+) -> Params:
+    p: Params = {"w": fan_in_init(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = p["w"].astype(compute_dtype)
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype), w)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def embedding_init(key: PRNGKey, vocab: int, d: int, *, dtype=jnp.bfloat16) -> Params:
+    return {"table": trunc_normal(key, (vocab, d), 1.0 / math.sqrt(d), dtype)}
+
+
+def embedding_apply(p: Params, ids: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["table"].astype(compute_dtype), ids, axis=0)
+
+
+def rmsnorm_init(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(orig_dtype)
+
+
+def layernorm_init(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), f32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    Uses the split-halves convention (llama-style).
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# stacked-layer utilities (scan over depth)
+# ---------------------------------------------------------------------------
+
+
+def stack_layer_init(
+    layer_init: Callable[[PRNGKey], Params], key: PRNGKey, n_layers: int
+) -> Params:
+    """Initialize ``n_layers`` copies of a layer and stack leaves on axis 0.
+
+    vmap over the init keeps init time O(1) in tracing cost.
+    """
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(layer_init)(keys)
+
+
+def scan_layers(
+    body: Callable[[Any, Params], Any],
+    carry: Any,
+    stacked: Params,
+    *,
+    remat: bool = False,
+    remat_policy: Optional[Callable] = None,
+    unroll: int = 1,
+):
+    """Run ``carry = body(carry, layer_params)`` across the stacked dim with scan."""
+
+    fn = body
+    if remat:
+        fn = jax.checkpoint(body, policy=remat_policy, prevent_cse=False)
+
+    def step(c, layer_p):
+        return fn(c, layer_p), None
+
+    carry, _ = jax.lax.scan(step, carry, stacked, unroll=unroll)
+    return carry
+
+
+def slice_layers(stacked: Params, start: int, stop: int) -> Params:
+    """Static python slice of a stacked-params pytree along axis 0."""
+    return jax.tree_util.tree_map(lambda a: a[start:stop], stacked)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(params)
+    )
+
+
+def tree_shapes(params: Params) -> Params:
+    return jax.tree_util.tree_map(lambda a: tuple(a.shape), params)
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        params,
+    )

@@ -1,0 +1,167 @@
+"""ResNet-V2 (pre-activation) in pure JAX — the paper's workload trio.
+
+resnet_small  = ResNet26-V2  on CIFAR-10-shaped data   (32x32,  10 classes)
+resnet_medium = ResNet50-V2  on ImageNet64-shaped data  (64x64,  1000 classes)
+resnet_large  = ResNet152-V2 on ImageNet-shaped data    (224x224, 1000 classes)
+
+These are the collocation-study workloads: they run on *instances* produced by
+the core partitioner, reproducing the paper's experiment grid. BatchNorm uses
+batch statistics (training mode) — running-average eval stats are out of scope
+for a throughput/utilization characterization and noted in DESIGN.md.
+
+Convolution layers are heterogeneous across stages, so depth is unrolled
+python-side (stage structure is static and small) rather than scanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSuite
+from repro.models import module as nn
+from repro.models.model_api import Model, register_family
+from repro.sharding.plan import ShardingPlan
+
+Params = Dict[str, Any]
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32) -> Params:
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5  # He init
+    return {"w": nn.trunc_normal(key, (kh, kw, cin, cout), std, dtype)}
+
+
+def conv_apply(p: Params, x: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        p["w"].astype(x.dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=_DN,
+    )
+
+
+def bn_init(c: int) -> Params:
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def bn_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(xf, axis=(0, 1, 2), keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def _bottleneck_init(kg, cin: int, width: int, cout: int) -> Params:
+    p = {
+        "bn1": bn_init(cin),
+        "conv1": conv_init(kg(), 1, 1, cin, width),
+        "bn2": bn_init(width),
+        "conv2": conv_init(kg(), 3, 3, width, width),
+        "bn3": bn_init(width),
+        "conv3": conv_init(kg(), 1, 1, width, cout),
+    }
+    if cin != cout:
+        p["proj"] = conv_init(kg(), 1, 1, cin, cout)
+    return p
+
+
+def _bottleneck_apply(p: Params, x: jax.Array, stride: int) -> jax.Array:
+    pre = jax.nn.relu(bn_apply(p["bn1"], x))
+    shortcut = conv_apply(p["proj"], pre, stride) if "proj" in p else x
+    if "proj" not in p and stride > 1:
+        shortcut = x[:, ::stride, ::stride, :]
+    h = conv_apply(p["conv1"], pre, 1)
+    h = conv_apply(p["conv2"], jax.nn.relu(bn_apply(p["bn2"], h)), stride)
+    h = conv_apply(p["conv3"], jax.nn.relu(bn_apply(p["bn3"], h)), 1)
+    return shortcut + h
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    w0 = cfg.base_width
+    cifar_stem = cfg.img_size <= 32
+    params: Params = {
+        "stem": conv_init(kg(), 3 if cifar_stem else 7, 3 if cifar_stem else 7, 3, w0)
+    }
+    cin = w0
+    blocks = []
+    for stage, n_blocks in enumerate(cfg.stages):
+        width = w0 * (2**stage)
+        cout = width * 4
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            blocks.append(
+                {
+                    "p": _bottleneck_init(kg, cin, width, cout),
+                    "stride": stride,
+                }
+            )
+            cin = cout
+    params["blocks"] = [b["p"] for b in blocks]
+    params["final_bn"] = bn_init(cin)
+    params["head"] = nn.dense_init(kg(), cin, cfg.n_classes, dtype=jnp.float32)
+    return params
+
+
+def _block_strides(cfg: ModelConfig) -> Tuple[int, ...]:
+    strides = []
+    for stage, n_blocks in enumerate(cfg.stages):
+        for b in range(n_blocks):
+            strides.append(2 if (b == 0 and stage > 0) else 1)
+    return tuple(strides)
+
+
+def forward(cfg: ModelConfig, params: Params, images: jax.Array, plan: ShardingPlan):
+    """images: (B, H, W, 3) f32 -> logits (B, n_classes)."""
+    cifar_stem = cfg.img_size <= 32
+    x = conv_apply(params["stem"], images.astype(jnp.float32), 1 if cifar_stem else 2)
+    if not cifar_stem:
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+        )
+    for p, stride in zip(params["blocks"], _block_strides(cfg)):
+        x = _bottleneck_apply(p, x, stride)
+        x = plan.act(x, "hidden") if x.ndim == 3 else x
+    x = jax.nn.relu(bn_apply(params["final_bn"], x))
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return nn.dense_apply(params["head"], x, compute_dtype=jnp.float32)
+
+
+def _image_specs(cfg: ModelConfig, suite: ShapeSuite):
+    B = suite.global_batch
+    s = cfg.img_size
+    return {
+        "images": jax.ShapeDtypeStruct((B, s, s, 3), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+@register_family("resnet")
+def _build_resnet(cfg: ModelConfig) -> Model:
+    def loss(params, batch, plan: ShardingPlan):
+        logits = forward(cfg, params, batch["images"], plan)
+        labels = batch["labels"]
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        nll = lse - jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+        acc = jnp.mean((jnp.argmax(lf, axis=-1) == labels).astype(jnp.float32))
+        return jnp.mean(nll), {"ce": jnp.mean(nll), "accuracy": acc}
+
+    def _no_serve(*_a, **_k):
+        raise NotImplementedError("CNN classifier has no autoregressive serving path")
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: init_params(cfg, key),
+        loss=loss,
+        prefill=_no_serve,
+        decode=_no_serve,
+        cache_spec=lambda b, s: {},
+        input_specs=lambda suite: _image_specs(cfg, suite),
+    )

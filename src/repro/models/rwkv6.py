@@ -1,0 +1,376 @@
+"""RWKV-6 "Finch" (rwkv6-1.6b): attention-free LM with data-dependent decay.
+
+Training uses a *chunked* WKV scan: within a chunk the recurrence is expanded
+into a bounded pairwise form (all exponents are differences of cumulative
+log-decays, hence <= 0 and overflow-safe), and chunk-to-chunk state is carried
+with ``lax.scan``. Decode carries the (B, H, K, V) wkv state plus the
+token-shift hiddens, so serving cost is sequence-length independent — this is
+why rwkv6 runs the ``long_500k`` cell that full-attention archs skip.
+
+Math (per head, state S in R^{KxV}, decay w_t in (0,1)^K, bonus u in R^K):
+  o_t = r_t @ (S_{t-1} + (u * k_t) v_t^T)
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import losses
+from repro.models import module as nn
+from repro.models import transformer as tfm
+from repro.models.model_api import Model, _input_specs, register_family
+from repro.sharding.plan import ShardingPlan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV core (shared by ref oracle and model; Pallas kernel mirrors it)
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(
+    r: jax.Array,  # (B, T, H, K)
+    k: jax.Array,  # (B, T, H, K)
+    v: jax.Array,  # (B, T, H, V)
+    logw: jax.Array,  # (B, T, H, K), log-decay, <= 0
+    u: jax.Array,  # (H, K) bonus
+    state0: jax.Array,  # (B, H, K, V)
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,T,H,V) f32, final state (B,H,K,V) f32)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, f"T={T} must be divisible by chunk={chunk}"
+    n = T // chunk
+
+    rc = r.astype(jnp.float32).reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    kc = k.astype(jnp.float32).reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(jnp.float32).reshape(B, n, chunk, H, V).transpose(1, 0, 3, 2, 4)
+    wc = logw.astype(jnp.float32).reshape(B, n, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    # shapes now (n, B, H, C, K/V)
+
+    uf = u.astype(jnp.float32)
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_), k=-1)
+
+    def body(S, inputs):
+        rb, kb, vb, wb = inputs  # (B,H,C,K/V)
+        clw = jnp.cumsum(wb, axis=2)  # inclusive cumulative log-decay
+        clw_ex = clw - wb  # exclusive
+        # pairwise decay exponent for s<t: sum_{s<tau<t... } = clw_ex[t]-clw[s] <= 0
+        diff = clw_ex[:, :, :, None, :] - clw[:, :, None, :, :]  # (B,H,C,C,K)
+        decay = jnp.exp(jnp.where(tri_strict[None, None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rb, kb, decay)
+        # diagonal bonus term: r_t . (u * k_t)
+        diag = jnp.einsum("bhtk,hk->bht", rb * kb, uf)
+        out = jnp.einsum("bhts,bhsv->bhtv", scores, vb)
+        out = out + diag[..., None] * vb
+        # cross-chunk: r_t decayed to chunk start @ S
+        rdec = rb * jnp.exp(clw_ex)
+        out = out + jnp.einsum("bhtk,bhkv->bhtv", rdec, S)
+        # state update: S' = exp(clw[-1]) * S + sum_s exp(clw[-1]-clw[s]) k_s v_s^T
+        last = clw[:, :, -1:, :]  # (B,H,1,K)
+        kdec = kb * jnp.exp(last - clw)
+        S_new = jnp.exp(last[:, :, 0, :])[..., None] * S + jnp.einsum(
+            "bhsk,bhsv->bhkv", kdec, vb
+        )
+        return S_new, out
+
+    state, outs = jax.lax.scan(body, state0.astype(jnp.float32), (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, V)
+    return out, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence. r/k/logw: (B,H,K); v: (B,H,V); state (B,H,K,V)."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]  # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state + u[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def _lora_init(kg, d: int, rank: int, out: int) -> Params:
+    return {
+        "a": nn.fan_in_init(kg(), (d, rank), jnp.bfloat16),
+        "b": nn.zeros_init(kg(), (rank, out), jnp.bfloat16),
+    }
+
+
+def _lora(p: Params, x: jax.Array) -> jax.Array:
+    h = jnp.tanh(jnp.einsum("...d,dr->...r", x, p["a"].astype(x.dtype)))
+    return jnp.einsum("...r,ro->...o", h, p["b"].astype(x.dtype))
+
+
+def init_time_mix(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    d = cfg.d_model
+    s = cfg.ssm
+    H = d // s.head_dim
+    p: Params = {
+        "mu": 0.5 * jnp.ones((5, d), jnp.bfloat16),  # r,k,v,w,g lerp weights
+        "w_r": nn.fan_in_init(kg(), (d, d), jnp.bfloat16),
+        "w_k": nn.fan_in_init(kg(), (d, d), jnp.bfloat16),
+        "w_v": nn.fan_in_init(kg(), (d, d), jnp.bfloat16),
+        "w_g": nn.fan_in_init(kg(), (d, d), jnp.bfloat16),
+        "w_out": nn.fan_in_init(
+            kg(), (d, d), jnp.bfloat16, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),  # w0: strong decay init
+        "decay_lora": _lora_init(kg, d, s.lora_rank, d),
+        "bonus_u": 0.5 * jnp.ones((H, s.head_dim), jnp.float32),
+        "ln_out": nn.layernorm_init(d),
+    }
+    return p
+
+
+def init_channel_mix(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": 0.5 * jnp.ones((2, d), jnp.bfloat16),  # k, r lerps
+        "w_in": nn.fan_in_init(kg(), (d, f), jnp.bfloat16),
+        "w_r": nn.fan_in_init(kg(), (d, d), jnp.bfloat16),
+        "w_out": nn.fan_in_init(
+            kg(), (f, d), jnp.bfloat16, scale=1.0 / (2 * cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def init_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    return {
+        "tm_norm": nn.layernorm_init(cfg.d_model),
+        "time_mix": init_time_mix(cfg, kg()),
+        "cm_norm": nn.layernorm_init(cfg.d_model),
+        "channel_mix": init_channel_mix(cfg, kg()),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = nn.KeyGen(key)
+    return {
+        "embed": nn.embedding_init(kg(), cfg.padded_vocab, cfg.d_model),
+        "embed_norm": nn.layernorm_init(cfg.d_model),
+        "layers": nn.stack_layer_init(
+            functools.partial(init_block, cfg), kg(), cfg.n_layers
+        ),
+        "final_norm": nn.layernorm_init(cfg.d_model),
+        "lm_head": {"w_lm": nn.fan_in_init(kg(), (cfg.d_model, cfg.padded_vocab), jnp.bfloat16)},
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """x_{t-1}; for t=0 uses ``prev`` (decode carry) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def time_mix_seq(
+    cfg: ModelConfig, p: Params, x: jax.Array, plan: ShardingPlan,
+    state0: jax.Array, x_prev: jax.Array | None = None,
+):
+    """Sequence-mode time mixing. x: (B,T,d). Returns (y, new_state, last_x)."""
+    B, T, d = x.shape
+    s = cfg.ssm
+    H, K = d // s.head_dim, s.head_dim
+    xp = _token_shift(x, x_prev)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (_lerp(x, xp, mu[i]) for i in range(5))
+    r = nn.dense_apply({"w": p["w_r"]}, xr).reshape(B, T, H, K)
+    k = nn.dense_apply({"w": p["w_k"]}, xk).reshape(B, T, H, K)
+    v = nn.dense_apply({"w": p["w_v"]}, xv).reshape(B, T, H, K)
+    g = nn.dense_apply({"w": p["w_g"]}, xg)
+    # data-dependent decay (Finch): logw = -exp(w0 + lora(xw)), in (-inf, 0)
+    ww = p["decay_base"].astype(jnp.float32) + _lora(p["decay_lora"], xw).astype(
+        jnp.float32
+    )
+    logw = -jnp.exp(ww).reshape(B, T, H, K)
+    r, k = plan.act(r, "heads"), plan.act(k, "heads")
+    if jax.default_backend() == "tpu" and T % s.chunk == 0:
+        from repro.kernels import ops as kops  # Pallas hot path
+
+        out, state = kops.wkv6(r, k, v, logw, p["bonus_u"], state0,
+                               chunk=s.chunk, mode="tpu")
+    else:
+        out, state = wkv_chunked(r, k, v, logw, p["bonus_u"], state0,
+                                 chunk=s.chunk)
+    out = plan.act(out.astype(jnp.bfloat16), "heads")
+    out = nn.layernorm_apply(p["ln_out"], out.reshape(B, T, d))  # group-norm-ish
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(out.dtype)
+    y = nn.dense_apply({"w": p["w_out"]}, out)
+    return y, state, x[:, -1, :]
+
+
+def channel_mix_seq(
+    cfg: ModelConfig, p: Params, x: jax.Array, x_prev: jax.Array | None = None
+):
+    xp = _token_shift(x, x_prev)
+    xk = _lerp(x, xp, p["mu"][0])
+    xr = _lerp(x, xp, p["mu"][1])
+    h = nn.dense_apply({"w": p["w_in"]}, xk)
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(h.dtype)
+    r = jax.nn.sigmoid(
+        nn.dense_apply({"w": p["w_r"]}, xr).astype(jnp.float32)
+    ).astype(h.dtype)
+    return r * nn.dense_apply({"w": p["w_out"]}, h), x[:, -1, :]
+
+
+def block_seq(cfg: ModelConfig, plan: ShardingPlan, x, lp: Params, state0):
+    y, state, tm_last = time_mix_seq(
+        cfg, lp["time_mix"], nn.layernorm_apply(lp["tm_norm"], x), plan, state0
+    )
+    x = plan.act(x + y, "hidden")
+    y, cm_last = channel_mix_seq(
+        cfg, lp["channel_mix"], nn.layernorm_apply(lp["cm_norm"], x)
+    )
+    x = plan.act(x + y, "hidden")
+    return x, state, (tm_last, cm_last)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, plan: ShardingPlan):
+    B, T = tokens.shape
+    s = cfg.ssm
+    H, K = cfg.d_model // s.head_dim, s.head_dim
+    h = nn.embedding_apply(params["embed"], tokens)
+    h = nn.layernorm_apply(params["embed_norm"], h)
+    h = plan.act(h, "hidden")
+    state0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def body(x, lp):
+        x, _, _ = block_seq(cfg, plan, x, lp, state0)
+        return x
+
+    h = nn.scan_layers(body, h, params["layers"], remat=cfg.remat)
+    h = nn.layernorm_apply(params["final_norm"], h)
+    logits = tfm.mask_pad_logits(cfg, nn.dense_apply({"w": params["lm_head"]["w_lm"]}, h))
+    return plan.act(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# serving: state cache = {wkv (L,B,H,K,V), tm_x (L,B,d), cm_x (L,B,d)}
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, _max_len: int):
+    s = cfg.ssm
+    H, K = cfg.d_model // s.head_dim, s.head_dim
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, K, K), jnp.float32),
+        "tm_x": jax.ShapeDtypeStruct((L, batch, d), jnp.bfloat16),
+        "cm_x": jax.ShapeDtypeStruct((L, batch, d), jnp.bfloat16),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, plan: ShardingPlan):
+    B, T = tokens.shape
+    s = cfg.ssm
+    H, K = cfg.d_model // s.head_dim, s.head_dim
+    h = nn.layernorm_apply(
+        params["embed_norm"], nn.embedding_apply(params["embed"], tokens)
+    )
+    h = plan.act(h, "hidden")
+    state0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def body(x, lp):
+        x, state, (tm_last, cm_last) = block_seq(cfg, plan, x, lp, state0)
+        return x, (state, tm_last.astype(jnp.bfloat16), cm_last.astype(jnp.bfloat16))
+
+    h, (states, tm_xs, cm_xs) = jax.lax.scan(body, h, params["layers"])
+    h = nn.layernorm_apply(params["final_norm"], h[:, -1:, :])
+    logits = tfm.mask_pad_logits(cfg, nn.dense_apply({"w": params["lm_head"]["w_lm"]}, h))[:, 0, :]
+    cache = {
+        "wkv": plan.act(states, "state"),
+        "tm_x": tm_xs,
+        "cm_x": cm_xs,
+    }
+    return plan.act(logits, "last_logits"), cache
+
+
+def decode_step(cfg, params, token, cache, _pos, plan: ShardingPlan):
+    B = token.shape[0]
+    s = cfg.ssm
+    d = cfg.d_model
+    H, K = d // s.head_dim, s.head_dim
+    x = nn.layernorm_apply(
+        params["embed_norm"], nn.embedding_apply(params["embed"], token[:, None])
+    )[:, 0, :]  # (B, d)
+
+    def body(x, layer_in):
+        lp, wkv, tm_x, cm_x = layer_in
+        tm = lp["time_mix"]
+        xn_tm = nn.layernorm_apply(lp["tm_norm"], x)
+        xn = xn_tm
+        mu = tm["mu"]
+        xr, xk, xv, xw, xg = (_lerp(xn, tm_x.astype(xn.dtype), mu[i]) for i in range(5))
+        r = nn.dense_apply({"w": tm["w_r"]}, xr).reshape(B, H, K)
+        k = nn.dense_apply({"w": tm["w_k"]}, xk).reshape(B, H, K)
+        v = nn.dense_apply({"w": tm["w_v"]}, xv).reshape(B, H, K)
+        g = nn.dense_apply({"w": tm["w_g"]}, xg)
+        ww = tm["decay_base"].astype(jnp.float32) + _lora(tm["decay_lora"], xw).astype(
+            jnp.float32
+        )
+        logw = -jnp.exp(ww).reshape(B, H, K)
+        out, wkv_new = wkv_step(r, k, v, logw, tm["bonus_u"], wkv)
+        out = nn.layernorm_apply(tm["ln_out"], out.astype(jnp.bfloat16).reshape(B, d))
+        out = out * jax.nn.silu(g.astype(jnp.float32)).astype(out.dtype)
+        x = x + nn.dense_apply({"w": tm["w_out"]}, out)
+        # channel mix
+        cm = lp["channel_mix"]
+        xn_cm = nn.layernorm_apply(lp["cm_norm"], x)
+        xk2 = _lerp(xn_cm, cm_x.astype(xn_cm.dtype), cm["mu"][0])
+        xr2 = _lerp(xn_cm, cm_x.astype(xn_cm.dtype), cm["mu"][1])
+        hh = nn.dense_apply({"w": cm["w_in"]}, xk2)
+        hh = jnp.square(jax.nn.relu(hh.astype(jnp.float32))).astype(hh.dtype)
+        rr = jax.nn.sigmoid(
+            nn.dense_apply({"w": cm["w_r"]}, xr2).astype(jnp.float32)
+        ).astype(hh.dtype)
+        x = x + rr * nn.dense_apply({"w": cm["w_out"]}, hh)
+        # carries: the *inputs* each mixer saw this step (token-shift sources)
+        return x, (wkv_new, xn_tm.astype(jnp.bfloat16), xn_cm.astype(jnp.bfloat16))
+
+    x, (wkv_new, tm_new, cm_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_x"], cache["cm_x"])
+    )
+    x = nn.layernorm_apply(params["final_norm"], x)
+    logits = tfm.mask_pad_logits(cfg, nn.dense_apply({"w": params["lm_head"]["w_lm"]}, x))
+    return plan.act(logits, "last_logits"), {
+        "wkv": plan.act(wkv_new, "state"),
+        "tm_x": tm_new,
+        "cm_x": cm_new,
+    }
+
+
+@register_family("rwkv")
+def _build_rwkv(cfg: ModelConfig) -> Model:
+    def loss(params, batch, plan: ShardingPlan):
+        logits = forward(cfg, params, batch["tokens"], plan)
+        return losses.softmax_cross_entropy(logits, batch["labels"])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: init_params(cfg, key),
+        loss=loss,
+        prefill=lambda params, batch, plan: prefill(cfg, params, batch["tokens"], plan),
+        decode=lambda params, batch, cache, pos, plan: decode_step(
+            cfg, params, batch["token"], cache, pos, plan
+        ),
+        cache_spec=lambda b, s: cache_spec(cfg, b, s),
+        input_specs=lambda suite: _input_specs(cfg, suite),
+    )

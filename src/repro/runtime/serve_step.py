@@ -1,0 +1,158 @@
+"""Serving-step builders: batched prefill and single-token decode with a
+sharded KV cache. ``decode`` is the step lowered for decode_32k / long_500k
+dry-run cells (one new token against a seq_len-long cache), per the brief.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeSuite
+from repro.models.model_api import Model
+from repro.sharding.plan import (
+    ShardingPlan,
+    make_plan,
+    param_pspecs,
+    serve_param_pspecs,
+    validate_pspecs,
+    zero_param_pspecs,
+)
+
+
+def param_shardings(model: Model, mesh: Mesh, variant: str = "baseline"):
+    shape = jax.eval_shape(model.init, jax.random.key(0))
+    if variant == "zero":
+        specs = zero_param_pspecs(shape, mesh)
+    elif variant == "serve":
+        specs = serve_param_pspecs(shape, mesh)
+    else:
+        specs = validate_pspecs(shape, param_pspecs(shape), mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop any axis assignment that does not divide the dim (divisibility
+    safety net — batch-1 long-context cells, 1500-frame cross-KV, etc.)."""
+    fixed = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(entry if size and shape[i] % size == 0 else None)
+    fixed += [None] * (len(shape) - len(fixed))
+    return P(*fixed[: len(shape)])
+
+
+def cache_shardings(model: Model, mesh: Mesh, suite: ShapeSuite, plan: ShardingPlan):
+    spec_tree = model.cache_spec(suite.global_batch, suite.seq_len)
+
+    def rule(path, leaf):
+        name = str(path[-1].key) if path else ""
+        if name in ("k", "v", "xk", "xv"):
+            spec = plan.spec("cache")
+        elif name in ("wkv", "ssm"):
+            spec = plan.spec("state")
+        else:
+            # token-shift tails / conv tails: small, batch-sharded
+            dp = plan.dp_axes if plan.dp_axes else None
+            spec = P(None, dp, *((None,) * (leaf.ndim - 2)))
+        return NamedSharding(mesh, _fit_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, spec_tree)
+
+
+def build_prefill(model: Model, plan: ShardingPlan):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, plan)
+
+    return prefill_step
+
+
+def build_decode(model: Model, plan: ShardingPlan, pos: int):
+    """One-token decode step at static cache position ``pos``."""
+
+    def decode_step(params, batch, cache):
+        return model.decode(params, batch, cache, pos, plan)
+
+    return decode_step
+
+
+def jit_decode_step(model: Model, mesh: Mesh, suite: ShapeSuite,
+                    variant: str = "baseline"):
+    """jit'd decode step with cache donation (in-place KV update)."""
+    plan = make_plan(model.cfg, mesh, suite, variant=variant)
+    p_sh = param_shardings(model, mesh, variant)
+    c_sh = cache_shardings(model, mesh, suite, plan)
+    # token batch sharding must respect divisibility (batch=1 long-context
+    # cells leave the batch dim unsharded — plan.spec('tokens') encodes that)
+    tok_batch_axis = plan.spec("tokens")[0] if len(plan.spec("tokens")) else None
+    tok_sh = {"token": NamedSharding(mesh, P(tok_batch_axis))}
+    if model.cfg.enc_layers:
+        tok_sh["frames"] = NamedSharding(mesh, plan.spec("frames"))
+    step = build_decode(model, plan, suite.seq_len - 1)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, tok_sh, c_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+    return jitted, p_sh, tok_sh, c_sh, plan
+
+
+def jit_prefill_step(model: Model, mesh: Mesh, suite: ShapeSuite,
+                     variant: str = "baseline"):
+    plan = make_plan(model.cfg, mesh, suite, variant=variant)
+    p_sh = param_shardings(model, mesh, variant)
+    b_sh = {"tokens": NamedSharding(mesh, plan.spec("tokens"))}
+    if model.cfg.n_patches:
+        b_sh["patches"] = NamedSharding(mesh, plan.spec("frames"))
+    if model.cfg.enc_layers:
+        b_sh["frames"] = NamedSharding(mesh, plan.spec("frames"))
+    c_sh = cache_shardings(model, mesh, suite, plan)
+    jitted = jax.jit(
+        build_prefill(model, plan),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(None, c_sh),
+    )
+    return jitted, p_sh, b_sh, plan
+
+
+def pad_cache(cache, extra: int):
+    """Grow the self-attention KV seq dim by ``extra`` slots after prefill."""
+
+    def pad(path, leaf):
+        name = str(path[-1].key) if path else ""
+        if name in ("k", "v", "attn_k", "attn_v") and leaf.ndim == 5:
+            cfgpad = [(0, 0)] * leaf.ndim
+            cfgpad[2] = (0, extra)
+            return jnp.pad(leaf, cfgpad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def greedy_generate(
+    model: Model,
+    params,
+    prompt: jax.Array,  # (B, S) int32
+    max_new: int,
+    plan: ShardingPlan,
+):
+    """Eager greedy decoding loop for examples/tests (CPU-scale)."""
+    B, S = prompt.shape
+    last, cache = model.prefill(params, {"tokens": prompt}, plan)
+    cache = pad_cache(cache, max_new)
+    tokens = [jnp.argmax(last, axis=-1).astype(jnp.int32)]
+    for i in range(max_new - 1):
+        logits, cache = model.decode(
+            params, {"token": tokens[-1]}, cache, S + i, plan
+        )
+        tokens.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+    return jnp.stack(tokens, axis=1)  # (B, max_new)

@@ -1,0 +1,321 @@
+"""Sharding plans: FSDP+TP(+EP/SP) PartitionSpec policy per (config, mesh, shape).
+
+The policy is 2D GSPMD sharding:
+  * weights:   one dim over ``model`` (tensor-parallel), one over ``data``
+               (ZeRO-3/FSDP); gathered per-layer inside the depth scan.
+  * activations: batch over (``pod``, ``data``); heads / ffn-hidden / vocab
+               over ``model`` when divisible.
+  * KV caches: sequence dim over ``model`` (flash-decode style sharded
+               softmax), batch over data axes; for ``long_500k`` (batch=1) the
+               sequence dim is sharded over *all* axes (sequence parallelism).
+
+Models never name mesh axes: they call ``plan.act(x, kind)`` and the plan
+decides (or no-ops when plan is None — single-device smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSuite
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Optional[Mesh]
+    act_specs: Dict[str, P]
+    dp_axes: Tuple[str, ...]
+    tp_axis: Optional[str]
+
+    # -- activation constraints ---------------------------------------------
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.act_specs.get(kind)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def spec(self, kind: str) -> P:
+        return self.act_specs.get(kind, P())
+
+    def sharding(self, kind: str) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.act_specs.get(kind, P()))
+
+
+def _divisible(n: int, axis_size: int) -> bool:
+    return axis_size > 0 and n % axis_size == 0
+
+
+def make_plan(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    suite: Optional[ShapeSuite] = None,
+    *,
+    variant: str = "baseline",
+) -> ShardingPlan:
+    """Build the activation-sharding plan.
+
+    variant:
+      'baseline' — Megatron-style TP: the residual stream is replicated over
+                   the model axis between blocks (2 activation all-reduces
+                   per layer in fwd, 2 in bwd).
+      'sp'       — Megatron sequence parallelism: the residual stream is
+                   sharded over the model axis on the SEQUENCE dim between
+                   blocks. Wire-neutral vs 'baseline' (AG+RS == AR in ring
+                   cost) but cuts boundary activation memory and redundant
+                   norm compute by ~tp.
+      'zero'     — pure ZeRO-3 data parallelism: the batch is sharded over
+                   EVERY mesh axis (model included) and no tensor dim is
+                   contracted across devices; weights/optimizer are fully
+                   sharded and gathered one layer at a time inside the depth
+                   scan. Collective bytes scale with PARAMS instead of
+                   ACTIVATIONS — the right regime whenever
+                   tokens_per_step x d >> params (all train_4k cells).
+    """
+    if mesh is None:
+        return ShardingPlan(None, {}, (), None)
+
+    axes = mesh.axis_names
+    if variant == "zero":
+        return _make_zero_plan(cfg, mesh, suite)
+    # 'serve' shares the baseline activation plan; it differs only in the
+    # parameter residency (serve_param_pspecs)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    tp_size = mesh.shape[tp] if tp else 1
+
+    batch = suite.global_batch if suite else None
+    # batch too small to split over dp -> leave unsharded, push parallelism
+    # into the sequence dim instead (long_500k cells).
+    dp = dp_axes if (batch is None or _divisible(batch, dp_size)) else ()
+    seq_axes: Tuple[str, ...] = ()
+    if not dp and tp:
+        seq_axes = dp_axes + (tp,)  # SP: all axes onto the sequence dim
+
+    hd = cfg.resolved_head_dim
+    heads_tp = tp if _divisible(cfg.n_heads, tp_size) else None
+    kv_tp = tp if _divisible(cfg.n_kv_heads, tp_size) else None
+    ffn_tp = tp if _divisible(cfg.d_ff, tp_size) else None
+    vocab_tp = tp if _divisible(cfg.vocab, tp_size) else None
+
+    # Megatron-SP: residual stream seq-sharded over the model axis between
+    # blocks (only when the seq length divides; decode steps have seq=1)
+    seq_len = suite.seq_len if suite else None
+    sp_seq = (
+        tp
+        if (
+            variant == "sp"
+            and tp
+            and suite is not None
+            and suite.kind in ("train", "prefill")
+            and _divisible(suite.seq_len, tp_size)
+        )
+        else None
+    )
+
+    specs: Dict[str, P] = {
+        "tokens": P(dp, None),
+        "hidden": P(dp, sp_seq, None),
+        "heads": P(dp, None, heads_tp, None),
+        "kv_heads": P(dp, None, kv_tp, None),
+        "ffn": P(dp, None, ffn_tp),
+        "logits": P(dp, None, vocab_tp),
+        "last_logits": P(dp, vocab_tp),
+        # KV cache (L, B, S, KVH, D): sequence over model (flash-decode);
+        # falls back to SP over everything for batch-1 long-context cells.
+        "cache": P(None, dp, seq_axes if seq_axes else tp, None, None),
+        # recurrent state (L, B, H, K, V) — batch over dp, heads over tp.
+        "state": P(None, dp if dp else None, heads_tp, None, None),
+        # decode-step activations (B, 1, ...)
+        "decode_hidden": P(dp, None, None),
+        "decode_heads": P(dp, None, heads_tp, None),
+        # MoE grouped-GEMM tensors (E, C, d/f): experts over model (EP),
+        # capacity rows over data so both mesh axes stay busy.
+        "expert_group": P(tp, dp if dp else None, None),
+        "expert_hidden": P(tp, dp if dp else None, None),
+        # per-example grouped dispatch (B, E, C, d): batch over data, experts
+        # over model — GSPMD lowers the constraint into the MoE all-to-all.
+        "grouped": P(dp, tp, None, None),
+        # frames/patches stubs (B, T, D)
+        "frames": P(dp, None, None),
+    }
+    return ShardingPlan(mesh, specs, dp_axes, tp)
+
+
+def _make_zero_plan(cfg: ModelConfig, mesh: Mesh, suite: Optional[ShapeSuite]):
+    """ZeRO-3 plan: batch over as many axes as divide it; nothing else
+    sharded in activations (each device computes whole examples)."""
+    axes = tuple(mesh.axis_names)
+    # choose the largest prefix-product of axes that divides the batch,
+    # preferring to use every axis (full 256/512-way DP)
+    batch = suite.global_batch if suite else None
+    dp: Tuple[str, ...] = ()
+    if batch is not None:
+        for take in range(len(axes), 0, -1):
+            size = 1
+            for a in axes[-take:]:
+                size *= mesh.shape[a]
+            if batch % size == 0:
+                dp = axes[-take:]
+                break
+    else:
+        dp = axes
+    dp_entry = dp if dp else None
+    specs: Dict[str, P] = {
+        "tokens": P(dp_entry, None),
+        "hidden": P(dp_entry, None, None),
+        "heads": P(dp_entry, None, None, None),
+        "kv_heads": P(dp_entry, None, None, None),
+        "ffn": P(dp_entry, None, None),
+        "logits": P(dp_entry, None, None),
+        "last_logits": P(dp_entry, None),
+        "cache": P(None, dp_entry, None, None, None),
+        "state": P(None, dp_entry, None, None, None),
+        "decode_hidden": P(dp_entry, None, None),
+        "decode_heads": P(dp_entry, None, None, None),
+        "expert_group": P(None, dp_entry, None),
+        "expert_hidden": P(None, dp_entry, None),
+        "grouped": P(dp_entry, None, None, None),
+        "frames": P(dp_entry, None, None),
+    }
+    return ShardingPlan(mesh, specs, dp, None)
+
+
+def serve_param_pspecs(params, mesh: Mesh):
+    """Serving parameter specs: pure TP residency — weights sharded over the
+    ``model`` axis ONLY, replicated over data axes. Decode steps then issue
+    zero weight gathers (latency!) at the cost of params/tp per device; the
+    data axes carry the request batch."""
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        spec = _kernel_spec(name, leaf.ndim)
+        fixed = [ax if ax == "model" else None for ax in spec]
+        fixed += [None] * (leaf.ndim - len(fixed))
+        # divisibility guard
+        out = []
+        for dim, ax in zip(leaf.shape, fixed):
+            size = mesh.shape[ax] if isinstance(ax, str) else 1
+            out.append(ax if ax and dim % size == 0 else None)
+        return P(*out) if any(a is not None for a in out) else P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def zero_param_pspecs(params, mesh: Mesh):
+    """ZeRO-3 parameter specs: shard the largest dim of every leaf over the
+    FULL merged mesh (every axis), falling back to progressively smaller
+    axis groups until one divides. Norm vectors and small leaves replicate.
+    Gathers happen per-layer inside the depth scan, so peak memory is one
+    layer's worth of gathered weights."""
+    axes = tuple(mesh.axis_names)
+    groups = [axes[i:] for i in range(len(axes))]  # full, then suffixes
+
+    def rule(path, leaf):
+        if leaf.ndim == 0 or leaf.size < 1 << 14:
+            return P()  # tiny: replicate
+        # try dims largest-first (stacked layer kernels: skip the L dim 0
+        # only if another dim fits)
+        order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for grp in groups:
+            size = 1
+            for a in grp:
+                size *= mesh.shape[a]
+            for dim in order:
+                if leaf.shape[dim] % size == 0:
+                    spec = [None] * leaf.ndim
+                    spec[dim] = grp if len(grp) > 1 else grp[0]
+                    return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+# column-parallel (out dim -> model, in dim -> data)
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_lm", "w_qkv")
+# row-parallel (in dim -> model, out dim -> data)
+_ROW = ("wo", "w_down", "w_out")
+# embedding tables (vocab -> model, d -> data)
+_EMB = ("table",)
+# expert-stacked kernels: leading expert dim -> model (EP), then data
+_EXPERT_COL = ("e_gate", "e_up", "e_in")
+_EXPERT_ROW = ("e_down", "e_out")
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _kernel_spec(name: str, ndim: int) -> P:
+    """Build a spec for an (optionally L-stacked) kernel of rank ``ndim``."""
+
+    def pad(spec_tail: Tuple) -> P:
+        lead = (None,) * (ndim - len(spec_tail))
+        return P(*(lead + spec_tail))
+
+    if name in _EMB:
+        return P("model", "data") if ndim == 2 else pad(("model", "data"))
+    if name in _EXPERT_COL:
+        return pad(("model", "data", None))
+    if name in _EXPERT_ROW:
+        return pad(("model", None, "data"))
+    if name in _COL and ndim >= 2:
+        return pad(("data", "model"))
+    if name in _ROW and ndim >= 2:
+        return pad(("model", "data"))
+    return P()  # replicate (norm scales, biases, small vectors)
+
+
+def param_pspecs(params) -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec pytree matching ``params`` by leaf-name rules."""
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        spec = _kernel_spec(name, leaf.ndim)
+        # guard: only keep axes that divide the dim; replicate otherwise
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                fixed.append(None)
+            elif isinstance(ax, str):
+                fixed.append(ax)
+            else:
+                fixed.append(ax)
+        return P(*fixed) if any(a is not None for a in fixed) else P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def validate_pspecs(params, specs, mesh: Mesh):
+    """Replace any axis assignment that does not divide the dim (safety net)."""
+
+    def fix(leaf, spec):
+        new = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                new.append(None)
+                continue
+            size = mesh.shape[ax] if isinstance(ax, str) else 1
+            new.append(ax if leaf.shape[i] % size == 0 else None)
+        # pad spec to leaf rank
+        new += [None] * (leaf.ndim - len(new))
+        return P(*new)
+
+    return jax.tree_util.tree_map(fix, params, specs)
+
+
+def named_shardings(params_or_specs, specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda _, s: NamedSharding(mesh, s), params_or_specs, specs
+    )

@@ -1,0 +1,18 @@
+"""TPU v5e hardware constants used by the roofline model (per the brief)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+# mesh geometry
+SINGLE_POD_CHIPS = 256  # 16 x 16
+MULTI_POD_CHIPS = 512  # 2 x 16 x 16
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}

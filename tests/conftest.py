@@ -1,0 +1,11 @@
+import sys
+from pathlib import Path
+
+# allow `pytest tests/` without PYTHONPATH=src
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see the single real device. Multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (tests/test_multidevice.py).

@@ -1,0 +1,106 @@
+"""Checkpoint store: round-trip, atomicity, integrity, GC, async."""
+import json
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import MANIFEST, CheckpointStore
+
+
+def make_tree(seed=0):
+    k = jax.random.key(seed)
+    ks = jax.random.split(k, 4)
+    return {
+        "params": {
+            "w": jax.random.normal(ks[0], (8, 16), jnp.float32),
+            "emb": jax.random.normal(ks[1], (32, 8)).astype(jnp.bfloat16),
+        },
+        "opt": {
+            "step": jnp.int32(7),
+            "m": jax.random.normal(ks[2], (8, 16), jnp.float32),
+        },
+    }
+
+
+def assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree = make_tree()
+    store.save(10, tree, extra={"loss": 1.5})
+    restored, extra = store.restore(jax.eval_shape(lambda: tree))
+    assert_tree_equal(tree, restored)
+    assert extra == {"loss": 1.5}
+    assert store.latest_step() == 10
+
+
+def test_manifestless_checkpoint_is_invisible(tmp_path):
+    """Atomicity contract: a save without manifest (killed writer) is skipped."""
+    store = CheckpointStore(tmp_path)
+    tree = make_tree()
+    store.save(1, tree)
+    store.save(2, tree)
+    (tmp_path / "step_00000002" / MANIFEST).unlink()  # simulate torn write
+    assert store.latest_step() == 1
+    restored, _ = store.restore(tree)  # falls back to step 1
+    assert_tree_equal(tree, restored)
+
+
+def test_crc_corruption_detected(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    path = store.save(3, tree)
+    # flip bytes in the leaf file
+    f = next(p for p in path.iterdir() if p.name.endswith(".npy"))
+    raw = bytearray(f.read_bytes())
+    raw[-4] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="crc"):
+        store.restore(tree)
+
+
+def test_gc_keeps_last_k(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        store.save(s, tree)
+    steps = [c.step for c in store.list()]
+    assert steps == [3, 4]
+
+
+def test_async_save_joins_and_is_valid(tmp_path):
+    store = CheckpointStore(tmp_path)
+    tree = make_tree(1)
+    store.save(5, tree, async_save=True)
+    store.wait()
+    restored, _ = store.restore(tree)
+    assert_tree_equal(tree, restored)
+
+
+def test_async_save_snapshot_semantics(tmp_path):
+    """The async save must capture values at call time, not at write time."""
+    store = CheckpointStore(tmp_path)
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    store.save(6, tree, async_save=True)
+    tree["w"][:] = -1  # caller mutates immediately after
+    store.wait()
+    restored, _ = store.restore({"w": np.zeros(8, dtype=np.float32)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8))
+
+
+def test_restore_specific_step(tmp_path):
+    store = CheckpointStore(tmp_path)
+    for s in (1, 2):
+        store.save(s, {"w": jnp.full((4,), float(s))})
+    restored, _ = store.restore({"w": jnp.zeros((4,))}, step=1)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones(4))

@@ -1,0 +1,63 @@
+"""Unit tests for core/metrics device-group aggregation and the
+interference verifier's HLO group parsing."""
+import numpy as np
+
+from repro.core.instance import InstanceRecord
+from repro.core.interference import (
+    check_collective_containment,
+    check_program_equivalence,
+    collective_groups,
+)
+from repro.core.metrics import (
+    collocation_speedup,
+    device_group_report,
+    epoch_time_s,
+    throughput_jobs_per_s,
+)
+
+
+def rec(job="w#0", profile="1g.5gb", step_s=1.0, fp="abc", chips=32):
+    return InstanceRecord(
+        job=job, arch="w", shape="t", profile=profile, start=0, chips=chips,
+        hbm_budget_bytes=1, peak_bytes_per_device=1.0, fits=True,
+        step_s=step_s, compute_s=step_s / 2, memory_s=step_s / 4,
+        collective_s=step_s, bound="collective", mfu=0.1,
+        dcgm={"gract": 0.8, "smact": 0.5, "smocc_proxy": 0.4, "drama": 0.6},
+        hlo_fingerprint=fp,
+    )
+
+
+def test_device_group_weighting():
+    # 2 instances of 1g (1 unit each) on an 8-unit pod: device-level = 2/8
+    r = device_group_report("1g.5gb parallel", "w", [rec(), rec(job="w#1")])
+    np.testing.assert_allclose(r.device_metrics["gract"], 0.8 * 2 / 8)
+    assert r.occupied_units == 2
+    # full-device profile: device-level == instance-level
+    r7 = device_group_report("7g.40gb one", "w", [rec(profile="7g.40gb")])
+    np.testing.assert_allclose(r7.device_metrics["gract"], 0.8)
+
+
+def test_epoch_time_and_speedup():
+    r = rec(step_s=2.0)
+    assert epoch_time_s(r, samples_per_epoch=100, batch=32) == 2.0 * 4  # ceil
+    full = rec(profile="7g.40gb", step_s=1.0)
+    par = [rec(job=f"w#{i}", step_s=3.0) for i in range(7)]
+    np.testing.assert_allclose(collocation_speedup(par, full), 7 / 3)
+    np.testing.assert_allclose(throughput_jobs_per_s(par), 7 / 3.0)
+
+
+def test_program_equivalence_detects_divergence():
+    ok, _ = check_program_equivalence([rec(), rec(job="w#1")])
+    assert ok
+    ok, why = check_program_equivalence([rec(), rec(job="w#1", fp="zzz")])
+    assert not ok and "fingerprint" in why
+
+
+def test_collective_containment():
+    hlo = 'x = f32[4] all-reduce(%y), replica_groups={{0,1},{2,3}}, to_apply=%add'
+    groups = collective_groups(hlo)
+    assert [0, 1] in groups and [2, 3] in groups
+    ok, _ = check_collective_containment(hlo, [10, 11, 12, 13], 4)
+    assert ok
+    ok, why = check_collective_containment(hlo, [10, 11], 2)
+    assert not ok  # group {2,3} exceeds a 2-device instance

@@ -1,0 +1,127 @@
+"""Unit tests for the module substrate + sharding plan rules."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models import module as nn
+
+
+def test_rmsnorm_matches_manual():
+    x = jax.random.normal(jax.random.key(0), (2, 5, 8))
+    p = nn.rmsnorm_init(8)
+    got = nn.rmsnorm_apply(p, x)
+    want = x / np.sqrt(np.mean(np.square(np.asarray(x)), -1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_layernorm_zero_mean_unit_var():
+    x = jax.random.normal(jax.random.key(1), (4, 16)) * 5 + 3
+    p = nn.layernorm_init(16)
+    y = np.asarray(nn.layernorm_apply(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(-1), 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.key(2), (1, 6, 2, 16))
+    pos = jnp.arange(6)
+    y = nn.apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.key(3), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.key(4), (1, 1, 1, 16))
+    def dot(i, j):
+        qi = nn.apply_rope(q, jnp.array([i]))
+        kj = nn.apply_rope(k, jnp.array([j]))
+        return float(jnp.sum(qi * kj))
+    np.testing.assert_allclose(dot(3, 1), dot(7, 5), rtol=1e-4)
+
+
+def test_scan_layers_equals_python_loop():
+    def layer_init(key):
+        return {"w": jax.random.normal(key, (8, 8)) * 0.1}
+
+    stacked = nn.stack_layer_init(layer_init, jax.random.key(0), 5)
+    x = jax.random.normal(jax.random.key(1), (2, 8))
+
+    def body(c, lp):
+        return jnp.tanh(c @ lp["w"])
+
+    got = nn.scan_layers(body, x, stacked)
+    want = x
+    for i in range(5):
+        want = jnp.tanh(want @ stacked["w"][i])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    # remat path identical
+    got_r = nn.scan_layers(body, x, stacked, remat=True)
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(got), rtol=1e-6)
+
+
+def test_mask_pad_logits():
+    from repro.configs.registry import get_config
+    from repro.models.transformer import mask_pad_logits
+
+    cfg = get_config("granite-3-2b")  # vocab 49155 -> padded 49168
+    assert cfg.padded_vocab % 16 == 0 and cfg.padded_vocab >= cfg.vocab
+    logits = jnp.zeros((1, cfg.padded_vocab))
+    masked = mask_pad_logits(cfg, logits)
+    assert float(masked[0, cfg.vocab - 1]) == 0.0
+    assert float(masked[0, cfg.vocab]) < -1e29
+    p = jax.nn.softmax(masked, -1)
+    np.testing.assert_allclose(float(jnp.sum(p[0, cfg.vocab:])), 0.0, atol=1e-12)
+
+
+@given(st.integers(1, 16), st.integers(1, 16))
+@settings(max_examples=40, deadline=None)
+def test_param_pspec_axes_divide_or_replicate(rows_mult, cols_mult):
+    """validate_pspecs never assigns an axis that does not divide the dim."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.sharding.plan import param_pspecs, validate_pspecs
+
+    params = {
+        "wq": jnp.zeros((rows_mult * 3, cols_mult * 5)),
+        "table": jnp.zeros((rows_mult * 7, cols_mult * 2)),
+        "scale": jnp.zeros((rows_mult,)),
+    }
+    devs = np.array(jax.devices() * 1, dtype=object)  # 1 device, shape (1,1)
+    mesh = Mesh(devs.reshape(1, 1), ("data", "model"))
+    specs = validate_pspecs(params, param_pspecs(params), mesh)
+    for leaf, spec in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
+    ):
+        pass  # structure check only: validate_pspecs ran without error
+
+
+def test_fit_spec_drops_nondividing_axes():
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.runtime.serve_step import _fit_spec
+
+    devs = np.array(jax.devices() * 1, dtype=object).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))  # sizes 1,1 always divide
+
+    spec = _fit_spec(P("data", "model"), (3, 5), mesh)
+    assert tuple(spec) == ("data", "model")  # size-1 axes always fit
+    # longer spec than rank is trimmed
+    spec = _fit_spec(P("data", None, "model"), (4, 2), mesh)
+    assert len(spec) == 2
+
+
+def test_losses_cross_entropy_uniform():
+    from repro.models import losses
+
+    V = 16
+    logits = jnp.zeros((2, 3, V))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    loss, metrics = losses.softmax_cross_entropy(logits, labels)
+    # total includes the z-loss regularizer; pure CE is in metrics["ce"]
+    np.testing.assert_allclose(float(metrics["ce"]), np.log(V), rtol=1e-5)
+    np.testing.assert_allclose(
+        float(loss), np.log(V) + 1e-4 * np.log(V) ** 2, rtol=1e-5
+    )

@@ -1,0 +1,89 @@
+"""Property tests for the MIG-faithful slice algebra (hypothesis)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.profiles import (
+    EXCLUSIONS,
+    N_COMPUTE_SLICES,
+    N_UNITS,
+    PROFILES,
+    Placement,
+    enumerate_layouts,
+    homogeneous_layout,
+    validate_layout,
+)
+
+placements_st = st.lists(
+    st.builds(
+        Placement,
+        profile=st.sampled_from(sorted(PROFILES)),
+        start=st.integers(0, N_UNITS - 1),
+    ),
+    min_size=1,
+    max_size=8,
+)
+
+
+@given(placements_st)
+@settings(max_examples=300, deadline=None)
+def test_valid_layouts_respect_all_invariants(pls):
+    ok, why = validate_layout(pls)
+    if not ok:
+        return
+    # invariant 1: placement-tree starts
+    for pl in pls:
+        assert pl.start in PROFILES[pl.profile].starts
+    # invariant 2: no overlapping spans
+    spans = sorted(pl.span for pl in pls)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert b0 >= a1
+    # invariant 3: compute budget
+    assert sum(PROFILES[p.profile].compute_slices for p in pls) <= N_COMPUTE_SLICES
+    # invariant 4: documented exclusions
+    names = {p.profile for p in pls}
+    for bad in EXCLUSIONS:
+        assert not bad <= names
+
+
+def test_paper_documented_combinations():
+    """§2.1's worked examples."""
+    ok, _ = validate_layout([Placement("4g.20gb", 0), Placement("1g.5gb", 4)])
+    assert ok, "4g + 1g is explicitly allowed"
+    ok, _ = validate_layout(
+        [Placement("4g.20gb", 0), Placement("2g.10gb", 4), Placement("1g.5gb", 6)]
+    )
+    assert ok, "4g + 2g + 1g is explicitly allowed"
+    ok, why = validate_layout([Placement("4g.20gb", 0), Placement("3g.20gb", 4)])
+    assert not ok, "4g + 3g is the documented exclusion"
+    ok, _ = validate_layout([Placement("4g.20gb", 0), Placement("4g.20gb", 4)])
+    assert not ok, "2x 4g exceeds compute slices"
+    ok, _ = validate_layout([Placement("3g.20gb", 0), Placement("3g.20gb", 4)])
+    assert ok, "2x 3g.20gb is a supported A100 split"
+
+
+def test_homogeneous_layouts_match_paper_parallel_counts():
+    """§3.4: max parallel instances per profile (7, 3, 2, 1, 1)."""
+    want = {"1g.5gb": 7, "2g.10gb": 3, "3g.20gb": 2, "4g.20gb": 1, "7g.40gb": 1}
+    for prof, n in want.items():
+        lay = homogeneous_layout(prof)
+        assert len(lay) == n, f"{prof}: {len(lay)} != {n}"
+        ok, why = validate_layout(lay)
+        assert ok, f"{prof} homogeneous layout invalid: {why}"
+
+
+def test_enumerate_layouts_all_valid_and_nonempty():
+    layouts = enumerate_layouts(max_results=64)
+    assert len(layouts) >= 10
+    for lay in layouts:
+        ok, why = validate_layout(list(lay))
+        assert ok, why
+
+
+def test_compute_discount_algebra():
+    from repro.core.instance import compute_discount
+
+    assert compute_discount("7g.40gb") == 7 / 8  # F6: MIG overhead slice
+    assert compute_discount("3g.20gb") == 3 / 4
+    assert compute_discount("1g.5gb") == 1.0
+    assert compute_discount("4g.20gb") == 1.0
+    assert compute_discount("7g.40gb", partitioned=False) == 1.0  # non-MIG

@@ -1,0 +1,159 @@
+"""Collocation scheduler + elastic repack: admission, packing, stragglers."""
+import dataclasses
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs.base import ShapeSuite
+from repro.core.collocation import CollocationScheduler, _PROFILE_ORDER
+from repro.core.elastic import ElasticController
+from repro.core.instance import JobSpec
+from repro.core.profiles import N_UNITS, PROFILES, validate_layout
+from repro.telemetry.constants import HBM_PER_CHIP
+
+SUITE = ShapeSuite("t", 1024, 32, "train")
+
+
+def make_db(fits_map):
+    """fits_map: {(arch, profile): (fits, step_s)}."""
+    db = {}
+    for (arch, prof), (fits, step_s) in fits_map.items():
+        db[(arch, SUITE.name, prof)] = {
+            "fits": fits,
+            "step_s": step_s,
+            "peak_bytes_per_device": HBM_PER_CHIP * (4 if not fits else 0.5),
+        }
+    return db
+
+
+def full_db(arch, step_by_prof=None, fits_by_prof=None):
+    step_by_prof = step_by_prof or {}
+    fits_by_prof = fits_by_prof or {}
+    return make_db(
+        {
+            (arch, p): (fits_by_prof.get(p, True), step_by_prof.get(p, 1.0))
+            for p in _PROFILE_ORDER
+        }
+    )
+
+
+def test_admission_rejects_oom_profile():
+    """F5: medium/large workloads OOM on 1g.5gb -> scheduler rejection."""
+    db = full_db("big", fits_by_prof={"1g.5gb": False, "2g.10gb": False})
+    s = CollocationScheduler(db)
+    ok, why = s.admissible(JobSpec("j", "big", SUITE), "1g.5gb")
+    assert not ok and "OOM" in why
+    assert s.smallest_admissible(JobSpec("j", "big", SUITE)) == "3g.20gb"
+
+
+def test_packs_seven_small_jobs_on_1g():
+    """The paper's headline: 7 hyperparameter variants on 7x 1g.5gb."""
+    db = full_db("small")
+    s = CollocationScheduler(db)
+    jobs = [JobSpec(f"hp{i}", "small", SUITE) for i in range(7)]
+    sched = s.schedule(jobs)
+    assert len(sched.assignments) == 7
+    assert all(a.profile == "1g.5gb" for a in sched.assignments)
+    assert not sched.rejections
+    ok, why = validate_layout([a.placement for a in sched.assignments])
+    assert ok, why
+
+
+def test_overflow_jobs_are_rejected_not_overpacked():
+    db = full_db("small")
+    s = CollocationScheduler(db)
+    jobs = [JobSpec(f"hp{i}", "small", SUITE) for i in range(9)]
+    sched = s.schedule(jobs)
+    assert len(sched.assignments) == 7
+    assert len(sched.rejections) == 2
+
+
+jobs_st = st.lists(
+    st.tuples(st.sampled_from(["small", "mid", "big"]), st.integers(0, 3)),
+    min_size=1,
+    max_size=10,
+)
+
+
+@given(jobs_st)
+@settings(max_examples=200, deadline=None)
+def test_schedules_are_always_valid_layouts(job_descs):
+    db = {}
+    db.update(full_db("small"))
+    db.update(full_db("mid", fits_by_prof={"1g.5gb": False}))
+    db.update(
+        full_db("big", fits_by_prof={p: p in ("4g.20gb", "7g.40gb") for p in _PROFILE_ORDER})
+    )
+    s = CollocationScheduler(db)
+    jobs = [
+        JobSpec(f"j{i}", arch, SUITE, priority=pr)
+        for i, (arch, pr) in enumerate(job_descs)
+    ]
+    sched = s.schedule(jobs)
+    ok, why = validate_layout([a.placement for a in sched.assignments])
+    assert ok, why
+    # every job is either placed or rejected, never both / lost
+    placed = {a.job.name for a in sched.assignments}
+    rejected = {r.job.name for r in sched.rejections}
+    assert placed | rejected == {j.name for j in jobs}
+    assert not placed & rejected
+    # admission respected
+    for a in sched.assignments:
+        assert s.admissible(a.job, a.profile)[0]
+
+
+def test_straggler_detection_and_repack_plan():
+    db = full_db("small", step_by_prof={p: 1.0 for p in _PROFILE_ORDER})
+    s = CollocationScheduler(db, straggler_tol=1.5, ema_alpha=1.0)
+    jobs = [JobSpec(f"j{i}", "small", SUITE) for i in range(3)]
+    sched = s.schedule(jobs)
+    s.observe_step("j0", 1.0)   # on target
+    s.observe_step("j1", 2.5)   # straggling
+    assert s.stragglers() == ["j1"]
+    plan = s.repack_plan(sched)
+    assert "j1" in plan and plan["j1"] != sched.assignments[0].profile
+    assert "j0" not in plan
+
+
+def test_elastic_repack_preserves_survivors():
+    db = full_db("small")
+    s = CollocationScheduler(db)
+    jobs = [JobSpec(f"j{i}", "small", SUITE) for i in range(7)]
+    sched = s.schedule(jobs)
+    ctrl = ElasticController(s)
+    ctrl.mark_failed([0, 1])  # two slice units die
+    ev = ctrl.repack(sched)
+    # jobs on units 0-1 are killed; others survive untouched
+    assert set(ev.killed_jobs) == {
+        a.job.name for a in sched.assignments if a.placement.start in (0, 1)
+    }
+    for a in ev.new_schedule.assignments:
+        span = (
+            set(range(N_UNITS))
+            if a.profile == "7g.40gb"
+            else set(range(*a.placement.span))
+        )
+        assert not span & {0, 1}, f"{a.job.name} re-placed on failed unit"
+    ok, why = validate_layout([a.placement for a in ev.new_schedule.assignments])
+    assert ok, why
+
+
+@given(st.sets(st.integers(0, N_UNITS - 1), max_size=6))
+@settings(max_examples=100, deadline=None)
+def test_elastic_repack_never_uses_failed_units(failed):
+    db = full_db("small")
+    s = CollocationScheduler(db)
+    jobs = [JobSpec(f"j{i}", "small", SUITE) for i in range(7)]
+    sched = s.schedule(jobs)
+    ctrl = ElasticController(s)
+    ctrl.mark_failed(sorted(failed))
+    ev = ctrl.repack(sched)
+    for a in ev.new_schedule.assignments:
+        span = (
+            set(range(N_UNITS))
+            if a.profile == "7g.40gb"
+            else set(range(*a.placement.span))
+        )
+        assert not span & failed
+    # no job is both survivor and killed
+    assert not set(ev.killed_jobs) & set(ev.survivors)

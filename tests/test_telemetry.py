@@ -1,0 +1,122 @@
+"""Telemetry unit tests: HLO collective parser + roofline algebra."""
+import jax.numpy as jnp
+
+from repro.telemetry import constants as C
+from repro.telemetry.hlo import (
+    CollectiveOp,
+    collective_summary,
+    computation_multipliers,
+    shape_bytes,
+)
+from repro.telemetry.roofline import RooflineReport
+
+HLO = """\
+HloModule jit_step
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %ag = f32[128,256] all-gather(%x), replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %ar = f32[128,256] all-reduce(%ag), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[128,256]) tuple(%x, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (arg: f32[128,256]) -> f32[128,256] {
+  %arg = f32[128,256] parameter(0)
+  %w = (s32[], f32[128,256]) while(%arg), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"40"}}
+  %rs = f32[8,256] reduce-scatter(%arg), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}, to_apply=%add
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[4], bf16[8])") == 16 + 16
+
+
+def test_while_trip_count_multiplies_collectives():
+    mults = computation_multipliers(HLO)
+    assert mults.get("body", mults.get("%body")) == 40
+    assert mults.get("cond") == 41  # trip_count + 1 evaluations
+    assert mults.get("add") == 40  # reached through the loop body
+
+
+def test_collective_summary_counts_and_ring_costs():
+    s = collective_summary(HLO)
+    kinds = s["by_kind"]
+    # all-gather + all-reduce execute 40x inside the while loop
+    assert kinds["all-gather"]["count"] == 40
+    assert kinds["all-reduce"]["count"] == 40
+    assert kinds["reduce-scatter"]["count"] == 1
+    bytes_x = 128 * 256 * 4
+    # ring all-reduce: 2 * R * (n-1)/n per device
+    assert abs(kinds["all-reduce"]["wire_bytes"] - 40 * 2 * bytes_x * 3 / 4) < 1
+    # all-gather of result R over 16: R * 15/16
+    assert abs(kinds["all-gather"]["wire_bytes"] - 40 * bytes_x * 15 / 16) < 1
+    # reduce-scatter: shard result R -> input n*R, wire R*(n-1)
+    assert abs(kinds["reduce-scatter"]["wire_bytes"] - (8 * 256 * 4) * 15) < 1
+
+
+HLO_DOT = """\
+HloModule jit_f
+
+%body (p: (s32[], f32[8,16], f32[16,32])) -> (s32[], f32[8,16], f32[16,32]) {
+  %p = (s32[], f32[8,16], f32[16,32]) parameter(0)
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,32] get-tuple-element(%p), index=2
+  %d = f32[8,32] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,16], f32[16,32]) tuple(%x, %w)
+}
+
+%cond (p: (s32[], f32[8,16], f32[16,32])) -> pred[] {
+  %p = (s32[], f32[8,16], f32[16,32]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,32]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,32] parameter(1)
+  %w = (s32[], f32[8,16], f32[16,32]) while(%a), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,16] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_flops_multiplied_by_trip_count():
+    from repro.telemetry.hlo import hlo_flops_bytes
+
+    est = hlo_flops_bytes(HLO_DOT)
+    # one dot of 2*8*32*16 flops, executed 12x by the while loop
+    assert est["flops"] == 12 * 2 * 8 * 32 * 16
+    # bytes include the dot's operands+result (x12) and entry parameters once
+    dot_bytes = (8 * 16 + 16 * 32 + 8 * 32) * 4
+    params = (8 * 16 + 16 * 32) * 4
+    assert est["bytes"] == 12 * dot_bytes + params
+
+
+def test_roofline_bound_selection():
+    r = RooflineReport(
+        arch="x", shape="y", mesh="16x16", chips=256,
+        flops_per_device=C.PEAK_FLOPS_BF16,          # 1 s of compute
+        hbm_bytes_per_device=C.HBM_BW / 2,           # 0.5 s of memory
+        wire_bytes_per_device=C.ICI_LINK_BW / 4,     # 0.25 s of collective
+        model_flops_global=C.PEAK_FLOPS_BF16 * 256,  # perfectly useful
+        peak_mem_bytes_per_device=1.0,
+    )
+    assert r.bound == "compute"
+    assert abs(r.step_s - 1.0) < 1e-9
+    assert abs(r.mfu - 1.0) < 1e-9
+    assert abs(r.frac_of_roofline - 1.0) < 1e-9
