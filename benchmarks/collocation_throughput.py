@@ -1,13 +1,67 @@
-"""Paper F2/F4: collocation throughput vs sequential full-device execution.
+"""Paper F2/F4 + the headline mode comparison.
 
-  small:  k jobs in parallel on k instances vs k sequential runs on 7g
-          — the paper's 2.83x headline;
-  medium/large: the same ratio collapses to ~1x (saturation, F4).
+  F2 section — k jobs in parallel on k MIG instances vs k sequential runs
+  on 7g: the paper's 2.83x headline for small; medium/large collapse to ~1x
+  (saturation, F4).
+
+  Mode section — the paper's central table: the same k collocated jobs under
+  naive process sharing, MPS, and MIG, each scored as speedup over running
+  them sequentially on the full device. Reproduces the recommendation: MPS
+  best for a single user's homogeneous jobs, MIG interference-free, naive
+  never better than sequential.
 """
 from __future__ import annotations
 
 from benchmarks.common import PAPER_F2_SPEEDUP, by_group, csv_line, load_collocation
 from repro.core.instance import InstanceRecord
+from repro.core.metrics import ModeComparison, mode_comparison
+from repro.core.sharing import STEP_LATENCY_S
+
+# MIG parallel groups that correspond to k collocated jobs
+_MIG_PARALLEL = (("1g.5gb", 7), ("2g.10gb", 3), ("3g.20gb", 2))
+
+
+def mode_rows(cells) -> list[ModeComparison]:
+    """Assemble naive/mps/mig comparison rows in one currency: per-step
+    time including the per-step dispatch-latency floor (the shared-mode
+    records already include it; MIG roofline records get it added here)."""
+    rows: list[ModeComparison] = []
+    workloads = sorted({w for (w, _g) in cells})
+    for w in workloads:
+        solo_cell = next(
+            (c for (w2, _g), c in sorted(cells.items())
+             if w2 == w and c.get("solo_step_s")),
+            None,
+        )
+        non_mig = cells.get((w, "non-MIG"))
+        if solo_cell is not None:
+            solo_step = float(solo_cell["solo_step_s"])
+        elif non_mig is not None:
+            solo_step = non_mig["records"][0]["step_s"] + STEP_LATENCY_S
+        else:
+            continue
+        for mode in ("naive", "mps"):
+            for k in (2, 4, 7):
+                c = cells.get((w, f"{mode} x{k}"))
+                if c is None:
+                    continue
+                recs = [InstanceRecord(**r) for r in c["records"]]
+                rows.append(mode_comparison(w, mode, recs, solo_step))
+        for prof, k in _MIG_PARALLEL:
+            c = cells.get((w, f"{prof} parallel"))
+            if c is None:
+                continue
+            recs = [
+                InstanceRecord(**{**r, "step_s": r["step_s"] + STEP_LATENCY_S})
+                for r in c["records"]
+            ]
+            # MIG is interference-free by construction (F3): the slice step
+            # is slice-sized with or without neighbours
+            rows.append(
+                mode_comparison(w, f"mig/{prof}", recs, solo_step,
+                                interference=1.0)
+            )
+    return rows
 
 
 def run() -> list[str]:
@@ -36,6 +90,16 @@ def run() -> list[str]:
                     f"seq_on_7g={k}x{t_full:.5f}s par={t_par:.5f}s{ref}",
                 )
             )
+    # the naive-vs-MPS-vs-MIG mode comparison (paper recommendation table)
+    for r in mode_rows(cells):
+        out.append(
+            csv_line(
+                f"mode_speedup/{r.workload}/{r.mode}/{r.k_jobs}x",
+                f"{r.speedup_vs_sequential:.2f}",
+                f"coll={r.effective_step_s:.5f}s solo={r.solo_step_s:.5f}s "
+                f"interference={r.max_interference:.2f}x fits={r.fits}",
+            )
+        )
     return out
 
 

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.report dryrun     # §Dry-run/§Roofline
     PYTHONPATH=src python -m benchmarks.report perf       # §Perf tagged cells
     PYTHONPATH=src python -m benchmarks.report collocate  # §Paper-claims
+    PYTHONPATH=src python -m benchmarks.report modes      # naive vs MPS vs MIG
 """
 from __future__ import annotations
 
@@ -66,22 +67,55 @@ def fmt_perf() -> str:
 
 def fmt_collocate() -> str:
     cells = load_collocation()
-    out = ["| workload | group | instances | step_s | epoch_s | fits | isolation |",
-           "|---|---|---|---|---|---|---|"]
+    out = ["| workload | group | mode | instances | step_s | epoch_s | fits | interference |",
+           "|---|---|---|---|---|---|---|---|"]
     for c in sorted(cells, key=lambda c: (c["workload"], c["group"])):
         if c.get("status") != "OK":
             continue
         recs = c["records"]
-        iso = c["isolation"]
+        mode = c.get("mode", "mig")
+        if "isolation" in c:
+            iso = c["isolation"]
+            proved = iso["disjoint"] and iso["programs_identical"]
+            interf = "none (proved)" if proved else "ISOLATION FAILED"
+        else:
+            q = c.get("interference_quant", {})
+            interf = f"{q.get('max_slowdown', 0):.2f}x predicted"
         out.append(
-            f"| {c['workload']} | {c['group']} | {len(recs)} | "
+            f"| {c['workload']} | {c['group']} | {mode} | {len(recs)} | "
             f"{recs[0]['step_s']:.5f} | {c['epoch_time_s'][0]:.2f} | "
-            f"{all(r['fits'] for r in recs)} | "
-            f"{'proved' if iso['disjoint'] and iso['programs_identical'] else 'FAILED'} |"
+            f"{all(r['fits'] for r in recs)} | {interf} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_modes() -> str:
+    """The paper's naive-vs-MPS-vs-MIG comparison for the workload grid.
+
+    Speedup = time of k sequential solo runs / collocated completion time;
+    interference = neighbour-induced slowdown (effective/solo for the shared
+    modes, 1.0 for MIG by construction — F3). Reproduces the recommendation
+    (MPS best single-user mode), MIG's interference-free column, and
+    naive's sequential-or-worse behaviour.
+    """
+    from benchmarks.collocation_throughput import mode_rows
+    from benchmarks.common import by_group
+
+    cells = by_group(load_collocation())
+    if not cells:
+        return "no collocation artifacts — run repro.launch.collocate first"
+    out = ["| workload | mode | k jobs | solo step_s | collocated step_s | speedup vs sequential | interference | fits |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in mode_rows(cells):
+        out.append(
+            f"| {r.workload} | {r.mode} | {r.k_jobs} | {r.solo_step_s:.5f} | "
+            f"{r.effective_step_s:.5f} | {r.speedup_vs_sequential:.2f}x | "
+            f"{r.max_interference:.2f}x | {r.fits} |"
         )
     return "\n".join(out)
 
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
-    print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate}[which]())
+    print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate,
+           "modes": fmt_modes}[which]())

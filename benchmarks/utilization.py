@@ -15,7 +15,9 @@ def run() -> list[str]:
     if not cells:
         return ["utilization,SKIP,run repro.launch.collocate first"]
     for (workload, group), cell in sorted(cells.items()):
-        dg = cell["device_group"]
+        dg = cell.get("device_group")
+        if dg is None:  # analytic shared-mode cells carry no DCGM telemetry
+            continue
         inst0 = dg["instance_metrics"][0] if dg["instance_metrics"] else {}
         for m in METRICS:
             out.append(

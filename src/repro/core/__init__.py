@@ -1,3 +1,13 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# Public mode API (kept dependency-light: sharing pulls in no jax).
+from repro.core.sharing import (  # noqa: F401
+    CollocationMode,
+    SharedModeReport,
+    SoloProfile,
+    mps_contention,
+    naive_contention,
+    shared_mode_report,
+)

@@ -1,8 +1,16 @@
-"""Collocation scheduler: pack jobs onto MIG-profile instances.
+"""Collocation scheduler: place jobs under a collocation mode.
 
 The paper demonstrates *why* (3x throughput for sub-saturating workloads,
 admission limits, no interference); this module is the *how* a production
-cluster acts on it:
+cluster acts on it. The scheduler is mode-aware (core/sharing.py): MIG packs
+jobs onto partitioned instances via the placement tree; NAIVE and MPS place
+them together on the full non-partitioned device and predict each job's
+effective step time from the mode's contention model. ``best_mode`` scores a
+job mix under all three modes and picks the winner — reproducing the paper's
+recommendation that MPS wins for a single user's homogeneous training jobs,
+MIG when model sizes align with the partitioning options, and naive never.
+
+The MIG path implements:
 
   * admission control — a job may only be placed on a profile whose
     per-device HBM budget covers the job's compiled peak memory (reproduces
@@ -27,13 +35,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.instance import JobSpec
+from repro.core.instance import JobSpec, compute_discount
 from repro.core.profiles import (
     N_UNITS,
     PROFILES,
     Placement,
     homogeneous_layout,
     validate_layout,
+)
+from repro.core.sharing import (
+    CollocationMode,
+    SharedModeReport,
+    SoloProfile,
+    shared_mode_report,
 )
 from repro.telemetry.constants import HBM_PER_CHIP
 
@@ -61,6 +75,8 @@ class Rejection:
 class Schedule:
     assignments: List[Assignment]
     rejections: List[Rejection]
+    mode: CollocationMode = CollocationMode.MIG
+    shared_report: Optional[SharedModeReport] = None  # NAIVE/MPS only
 
     @property
     def placements(self) -> List[Placement]:
@@ -74,12 +90,39 @@ class Schedule:
         )
 
 
+@dataclasses.dataclass
+class ModeDecision:
+    """Outcome of ``best_mode``: the winner plus every mode's scorecard."""
+
+    mode: CollocationMode
+    schedules: Dict[CollocationMode, Schedule]
+
+    @property
+    def schedule(self) -> Schedule:
+        return self.schedules[self.mode]
+
+    def scores(self) -> Dict[CollocationMode, Tuple[int, float]]:
+        return {
+            m: (len(s.assignments), s.throughput())
+            for m, s in self.schedules.items()
+        }
+
+
 # profile order: smallest first — the paper's throughput-maximizing choice
 _PROFILE_ORDER = ("1g.5gb", "2g.10gb", "3g.20gb", "4g.20gb", "7g.40gb")
 
 
+# Full-device profile the shared modes (naive / MPS) run on.
+_FULL_PROFILE = "7g.40gb"
+
+# Preference when modes tie on (jobs placed, aggregate throughput): the
+# paper recommends MPS as the most flexible, MIG next, naive last.
+_MODE_PREFERENCE = (CollocationMode.MPS, CollocationMode.MIG, CollocationMode.NAIVE)
+
+
 class CollocationScheduler:
-    """Greedy DP-free packer over the MIG placement tree."""
+    """Mode-aware placer: MIG placement-tree packing or shared-device
+    scheduling under the naive / MPS contention models."""
 
     def __init__(
         self,
@@ -89,12 +132,14 @@ class CollocationScheduler:
         partitioned: bool = True,
         straggler_tol: float = 1.5,
         ema_alpha: float = 0.25,
+        mode: CollocationMode = CollocationMode.MIG,
     ):
         self.char_db = char_db
         self.chips_per_unit = chips_per_unit
         self.partitioned = partitioned
         self.straggler_tol = straggler_tol
         self.ema_alpha = ema_alpha
+        self.mode = CollocationMode(mode)
         self._ema: Dict[str, float] = {}
         self._predicted: Dict[str, float] = {}
 
@@ -122,13 +167,23 @@ class CollocationScheduler:
     # -- packing ----------------------------------------------------------------
 
     def schedule(
-        self, jobs: Sequence[JobSpec], *, blocked_units: frozenset = frozenset()
+        self,
+        jobs: Sequence[JobSpec],
+        *,
+        blocked_units: frozenset = frozenset(),
+        mode: Optional[CollocationMode] = None,
     ) -> Schedule:
-        """Greedy: sort by priority desc, give each its smallest admissible
-        profile at the lowest free placement offset; upgrade to a larger
-        profile only if the small ones are exhausted. ``blocked_units`` are
-        unavailable slice units (failed hardware or surviving neighbours
-        during an elastic repack)."""
+        """Place ``jobs`` under ``mode`` (defaults to the scheduler's own).
+
+        MIG is a greedy pack: sort by priority desc, give each job its
+        smallest admissible profile at the lowest free placement offset;
+        upgrade to a larger profile only if the small ones are exhausted.
+        ``blocked_units`` are unavailable slice units (failed hardware or
+        surviving neighbours during an elastic repack). NAIVE/MPS share the
+        full device instead — see ``_schedule_shared``."""
+        mode = CollocationMode(mode if mode is not None else self.mode)
+        if mode != CollocationMode.MIG:
+            return self._schedule_shared(jobs, mode)
         # (the MIG overhead slice is a *compute* budget — enforced by
         # validate_layout's 7-slice check — not a blocked memory unit)
         free = [True] * N_UNITS
@@ -178,7 +233,105 @@ class CollocationScheduler:
                     break
             if not placed:
                 rejections.append(Rejection(job, "no free placement slot"))
-        return Schedule(assignments, rejections)
+        return Schedule(assignments, rejections, mode=CollocationMode.MIG)
+
+    # -- shared modes (naive / MPS) ------------------------------------------------
+
+    def solo_profile(self, job: JobSpec) -> Optional[SoloProfile]:
+        """The job's solo roofline profile on the full, non-partitioned
+        device, from the characterization DB. Shared modes run with MIG
+        disabled, so the F6 reserved-slice discount baked into the 7g record
+        is removed."""
+        rec = self.char_db.get((job.arch, job.suite.name, _FULL_PROFILE))
+        if rec is None:
+            return None
+        return SoloProfile.from_record(
+            job.name, rec, undiscount_compute=compute_discount(_FULL_PROFILE)
+        )
+
+    def _schedule_shared(
+        self, jobs: Sequence[JobSpec], mode: CollocationMode
+    ) -> Schedule:
+        """Place jobs together on the full device under a shared mode.
+
+        Admission is the paper's memory constraint: shared modes replicate
+        every job's working set on every chip, so per-chip footprints add
+        and the aggregate must fit HBM. Jobs are admitted in priority order
+        until the budget is exhausted; the mode's contention model then
+        predicts every admitted job's effective step time.
+        """
+        assignments: List[Assignment] = []
+        rejections: List[Rejection] = []
+        admitted: List[Tuple[JobSpec, SoloProfile]] = []
+        budget = HBM_PER_CHIP
+        used = 0.0
+        for job in sorted(jobs, key=lambda j: -j.priority):
+            prof = self.solo_profile(job)
+            if prof is None:
+                rejections.append(
+                    Rejection(
+                        job,
+                        f"no characterization for "
+                        f"{(job.arch, job.suite.name, _FULL_PROFILE)}",
+                    )
+                )
+                continue
+            rec = self.char_db[(job.arch, job.suite.name, _FULL_PROFILE)]
+            if not rec.get("fits", False):
+                rejections.append(
+                    Rejection(job, "OOM: does not fit the full device solo")
+                )
+                continue
+            if used + prof.peak_bytes_per_device > budget:
+                rejections.append(
+                    Rejection(
+                        job,
+                        f"OOM under {mode.value}: aggregate footprint "
+                        f"{(used + prof.peak_bytes_per_device) / 2**30:.1f} GiB "
+                        f"> {budget / 2**30:.1f} GiB shared HBM",
+                    )
+                )
+                continue
+            used += prof.peak_bytes_per_device
+            admitted.append((job, prof))
+
+        report = None
+        if admitted:
+            report = shared_mode_report(
+                mode, [p for _, p in admitted], hbm_budget_bytes=budget
+            )
+            for job, prof in admitted:
+                step = report.effective_step_s[prof.name]
+                a = Assignment(job, Placement(_FULL_PROFILE, 0), float(step))
+                assignments.append(a)
+                self._predicted[job.name] = a.predicted_step_s
+        return Schedule(assignments, rejections, mode=mode, shared_report=report)
+
+    # -- mode search -----------------------------------------------------------------
+
+    def best_mode(self, jobs: Sequence[JobSpec]) -> ModeDecision:
+        """Score the job mix under all three modes; pick the winner.
+
+        Modes are ranked lexicographically by (jobs placed, aggregate
+        throughput in jobs/s) — a mode that serves more of the mix beats a
+        faster mode that rejects jobs (the paper's admission findings F5),
+        throughput breaks the tie, and on exact ties the paper's
+        recommendation order applies: MPS > MIG > naive.
+        """
+        schedules = {m: self.schedule(jobs, mode=m) for m in CollocationMode}
+        best = max(
+            schedules,
+            key=lambda m: (
+                len(schedules[m].assignments),
+                schedules[m].throughput(),
+                -_MODE_PREFERENCE.index(m),
+            ),
+        )
+        # the trial schedules above each overwrote _predicted; straggler
+        # detection must compare against the mode actually deployed
+        for a in schedules[best].assignments:
+            self._predicted[a.job.name] = a.predicted_step_s
+        return ModeDecision(mode=best, schedules=schedules)
 
     # -- straggler mitigation -----------------------------------------------------
 

@@ -74,6 +74,10 @@ class InstanceRecord:
     dcgm: Dict[str, float]
     device_ids: Tuple[int, ...] = ()
     hlo_fingerprint: str = ""
+    # collocation mode the record was characterized under: "mig" (partitioned
+    # instance), "solo" (full non-partitioned device), or a shared mode
+    # ("naive"/"mps") for analytically-derived effective records.
+    mode: str = "mig"
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -177,4 +181,5 @@ class InstanceRuntime:
             dcgm=rl.dcgm_analogues(report),
             device_ids=self.device_ids(),
             hlo_fingerprint=fp,
+            mode="mig" if self.partitioned else "solo",
         )

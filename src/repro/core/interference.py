@@ -1,4 +1,14 @@
-"""Isolation verifier — the TPU analogue of the paper's F3 finding.
+"""Isolation verifier + shared-mode interference quantifier.
+
+Two complementary halves of the paper's interference story live here:
+
+  * for MIG (partitioned) layouts, ``verify_isolation`` *proves* the paper's
+    F3 finding structurally — co-located instances cannot interfere;
+  * for the shared modes (naive / MPS) isolation is impossible by
+    construction, so ``quantify_interference`` instead *quantifies* the
+    predicted interference from the mode's contention model
+    (core/sharing.py): per-job slowdown factors, the contended resources,
+    and whether the mix fits shared memory at all.
 
 On the A100 the paper *measures* that co-located MIG instances do not
 interfere (per-instance epoch time is unchanged). On a TPU pod, isolation of
@@ -27,6 +37,12 @@ from typing import Dict, List, Sequence, Tuple
 
 from repro.core.instance import InstanceRecord
 from repro.core.partitioner import InstanceMesh
+from repro.core.sharing import (
+    CollocationMode,
+    SoloProfile,
+    mig_report,
+    shared_mode_report,
+)
 
 _GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,{} ]*\})\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]")
@@ -103,6 +119,71 @@ def check_program_equivalence(records: Sequence[InstanceRecord]) -> Tuple[bool, 
             ):
                 return False, f"{key}: cost mismatch across instances"
     return True, ""
+
+
+@dataclasses.dataclass
+class InterferenceQuant:
+    """Predicted interference for one job mix under one collocation mode.
+
+    ``slowdown`` maps each job to effective/solo step time (1.0 == no
+    interference); ``contended`` lists resources whose aggregate demand
+    exceeds capacity; ``fits`` is the shared-memory admission verdict.
+    """
+
+    mode: CollocationMode
+    slowdown: Dict[str, float]
+    contended: List[str]
+    fits: bool
+
+    @property
+    def interference_free(self) -> bool:
+        return all(abs(s - 1.0) < 1e-9 for s in self.slowdown.values())
+
+    @property
+    def max_slowdown(self) -> float:
+        return max(self.slowdown.values(), default=1.0)
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["mode"] = self.mode.value
+        d["interference_free"] = self.interference_free
+        d["max_slowdown"] = self.max_slowdown
+        return d
+
+
+def quant_from_report(rep) -> InterferenceQuant:
+    """Derive the interference quantification from an already-computed
+    ``SharedModeReport`` (avoids re-running the contention model when the
+    caller, e.g. launch/collocate.py, holds one)."""
+    contended = [r for r, f in rep.contention.items() if f > 1.0 + 1e-12]
+    if rep.mode == CollocationMode.NAIVE and len(rep.effective_step_s) > 1:
+        contended = ["device"]  # the whole device is the contended resource
+    return InterferenceQuant(
+        mode=rep.mode,
+        slowdown=dict(rep.interference),
+        contended=contended,
+        fits=rep.fits,
+    )
+
+
+def quantify_interference(
+    mode: CollocationMode,
+    jobs: Sequence[SoloProfile],
+    mig_instance_step_s: Dict[str, float] | None = None,
+) -> InterferenceQuant:
+    """Predict per-job interference for ``jobs`` collocated under ``mode``.
+
+    MIG returns all-1.0 slowdowns (F3: proven isolation, see
+    ``verify_isolation``); the shared modes return the contention model's
+    per-job stretch — MPS only above aggregate saturation of a resource,
+    naive always (time-slicing serializes every neighbour's step).
+    """
+    mode = CollocationMode(mode)
+    if mode == CollocationMode.MIG:
+        rep = mig_report(jobs, mig_instance_step_s or {j.name: j.step_s for j in jobs})
+    else:
+        rep = shared_mode_report(mode, jobs)
+    return quant_from_report(rep)
 
 
 def verify_isolation(

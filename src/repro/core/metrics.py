@@ -15,7 +15,7 @@ single small instance barely registers at device level.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.instance import InstanceRecord
 from repro.core.profiles import N_UNITS, PROFILES
@@ -82,6 +82,72 @@ def collocation_speedup(
     t_seq = k * isolated_full.step_s
     t_par = max(r.step_s for r in parallel)
     return t_seq / t_par if t_par else 0.0
+
+
+@dataclasses.dataclass
+class ModeComparison:
+    """One row of the paper's naive-vs-MPS-vs-MIG comparison for a workload:
+    k jobs collocated under ``mode`` vs running them sequentially solo."""
+
+    workload: str
+    mode: str
+    k_jobs: int
+    effective_step_s: float  # slowest collocated job's step
+    solo_step_s: float  # one job alone on the full device
+    fits: bool
+    # neighbour-induced slowdown: collocated step / what the job would do on
+    # the same resources without neighbours. 1.0 for MIG by construction
+    # (F3 — a slice's step is slice-sized whether or not neighbours exist);
+    # effective/solo for the shared modes.
+    max_interference: float = 1.0
+
+    @property
+    def speedup_vs_sequential(self) -> float:
+        """k jobs sequentially take k*solo; collocated they finish together
+        after max effective step. > 1 means collocation wins (F2)."""
+        if not self.fits or self.effective_step_s <= 0:
+            return 0.0
+        return (self.k_jobs * self.solo_step_s) / self.effective_step_s
+
+
+def mode_comparison(
+    workload: str,
+    mode: str,
+    records: Sequence[InstanceRecord],
+    solo_step_s: float,
+    *,
+    interference: Optional[float] = None,
+) -> ModeComparison:
+    """One comparison row. ``interference`` defaults to effective/solo (the
+    shared-mode semantics); pass 1.0 explicitly for MIG rows (F3)."""
+    effective = max((r.step_s for r in records), default=0.0)
+    if interference is None:
+        interference = effective / solo_step_s if solo_step_s else 0.0
+    return ModeComparison(
+        workload=workload,
+        mode=mode,
+        k_jobs=len(records),
+        effective_step_s=effective,
+        solo_step_s=solo_step_s,
+        fits=all(r.fits for r in records),
+        max_interference=interference,
+    )
+
+
+def format_mode_table(rows: Sequence[ModeComparison]) -> str:
+    """The paper's headline table: collocation speedup per mode."""
+    hdr = (
+        f"{'workload':<16}{'mode':<8}{'k':>3}{'solo_s':>10}{'coll_s':>10}"
+        f"{'speedup':>9}{'interf':>8}{'fits':>6}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.workload:<16}{r.mode:<8}{r.k_jobs:>3}{r.solo_step_s:>10.5f}"
+            f"{r.effective_step_s:>10.5f}{r.speedup_vs_sequential:>8.2f}x"
+            f"{r.max_interference:>7.2f}x{str(r.fits):>6}"
+        )
+    return "\n".join(lines)
 
 
 def format_group_table(reports: Sequence[DeviceGroupReport]) -> str:

@@ -11,9 +11,14 @@ For every (workload x device-group) cell of the paper's grid this lowers and
 compiles the job's real train step on the instance's carved sub-mesh,
 derives step-time roofline + DCGM analogues + memory admission, verifies the
 isolation properties (core/interference.py), and writes one JSON artifact
-per cell to ``artifacts/collocation/``. The benchmarks (time_per_epoch,
-collocation_throughput, utilization, memory_footprint) read these artifacts
-and print the paper-table reproductions.
+per cell to ``artifacts/collocation/``. Every cell carries its collocation
+mode: the MIG grid cells are ``mode="mig"``, the full-device baseline is
+``mode="solo"``, and each workload additionally gets analytic shared-mode
+cells (``mode="naive"`` / ``mode="mps"`` at k = 2, 4, 7 collocated copies)
+derived from the solo characterization through the contention models in
+core/sharing.py. The benchmarks (time_per_epoch, collocation_throughput,
+utilization, memory_footprint, report) read these artifacts and print the
+paper-table reproductions, including the naive-vs-MPS-vs-MIG comparison.
 
 The 256 placeholder devices stand in for one 16x16 v5e pod; instances are
 contiguous row-blocks of the grid (32 chips per slice unit).
@@ -36,7 +41,7 @@ import jax
 from repro.configs.base import ShapeSuite
 from repro.core import interference
 from repro.core.collocation import paper_experiment_grid
-from repro.core.instance import InstanceRuntime, JobSpec
+from repro.core.instance import InstanceRecord, InstanceRuntime, JobSpec
 from repro.core.metrics import (
     collocation_speedup,
     device_group_report,
@@ -44,6 +49,15 @@ from repro.core.metrics import (
 )
 from repro.core.partitioner import device_grid, partition
 from repro.core.profiles import PROFILES
+from repro.core.sharing import (
+    CollocationMode,
+    SoloProfile,
+    shared_mode_report,
+)
+
+# collocated-copy counts for the analytic naive/MPS cells (the paper sweeps
+# 2..7 concurrent models; 7 matches the max 1g.5gb MIG instance count)
+SHARED_KS = (2, 4, 7)
 
 # The paper's workloads: batch 32 everywhere (§3.4); epoch sizes from the
 # datasets (CIFAR-10 45k train / ImageNet64 1.28M / ImageNet 1.28M).
@@ -73,6 +87,7 @@ def run_cell(workload: str, group: str, placements, grid, suite, samples, out_di
     cell = {
         "workload": workload,
         "group": group,
+        "mode": "mig" if partitioned else "solo",
         "status": "OK",
         "t_wall_s": round(time.time() - t0, 1),
         "suite": suite.name,
@@ -83,6 +98,49 @@ def run_cell(workload: str, group: str, placements, grid, suite, samples, out_di
         "isolation": dataclasses.asdict(iso),
     }
     label = f"{workload}__{group.replace(' ', '_').replace('.', '_')}"
+    (out_dir / f"{label}.json").write_text(json.dumps(cell, indent=2))
+    return cell
+
+
+def run_shared_cell(workload, mode, k, solo_rec, suite, samples, out_dir):
+    """One analytic shared-mode cell: k collocated copies of ``workload``
+    under ``mode`` (naive/mps), derived from the full-device solo record
+    through the contention model — no recompilation needed (the program is
+    unchanged; only the predicted step time shifts)."""
+    mode = CollocationMode(mode)
+    solo = SoloProfile.from_record(f"{workload}#0", solo_rec)
+    jobs = [
+        dataclasses.replace(solo, name=f"{workload}#{i}") for i in range(k)
+    ]
+    rep = shared_mode_report(mode, jobs)
+    quant = interference.quant_from_report(rep)
+    base = InstanceRecord(**solo_rec)
+    records = [
+        dataclasses.replace(
+            base,
+            job=j.name,
+            mode=mode.value,
+            step_s=float(rep.effective_step_s[j.name]),
+            fits=rep.fits,
+        )
+        for j in jobs
+    ]
+    cell = {
+        "workload": workload,
+        "group": f"{mode.value} x{k}",
+        "mode": mode.value,
+        "status": "OK",
+        "suite": suite.name,
+        "samples_per_epoch": samples,
+        "records": [r.to_dict() for r in records],
+        "epoch_time_s": [
+            epoch_time_s(r, samples, suite.global_batch) for r in records
+        ],
+        "solo_step_s": solo.step_s,
+        "shared": rep.to_dict(),
+        "interference_quant": quant.to_dict(),
+    }
+    label = f"{workload}__{mode.value}_x{k}"
     (out_dir / f"{label}.json").write_text(json.dumps(cell, indent=2))
     return cell
 
@@ -111,6 +169,7 @@ def main():
     full_rec = {}
     for w in workloads:
         suite, samples = PAPER_SUITES.get(w, (LM_SUITE, 1_281_167))
+        solo_rec = None
         for w2, group, placements in paper_experiment_grid([w], suite):
             try:
                 cell = run_cell(w, group, placements, grid, suite, samples, out_dir)
@@ -118,10 +177,10 @@ def main():
                 recs = cell["records"]
                 if group == "7g.40gb one":
                     full_rec[w] = recs[0]
+                if group == "non-MIG":
+                    solo_rec = recs[0]
                 speed = ""
                 if "parallel" in group and w in full_rec:
-                    from repro.core.instance import InstanceRecord
-
                     par = [InstanceRecord(**r) for r in recs]
                     iso_full = InstanceRecord(**full_rec[w])
                     speed = f" collocation_speedup={collocation_speedup(par, iso_full):.2f}x"
@@ -135,6 +194,29 @@ def main():
                 failures += 1
                 print(f"[FAIL] {w} {group}: {e}", flush=True)
                 traceback.print_exc(limit=3)
+        # analytic shared-mode cells (naive / MPS) from the solo baseline
+        if solo_rec is None:
+            print(f"[SKIP] {w} shared modes: no non-MIG solo record", flush=True)
+            continue
+        for mode in (CollocationMode.NAIVE, CollocationMode.MPS):
+            for k in SHARED_KS:
+                try:
+                    cell = run_shared_cell(
+                        w, mode, k, solo_rec, suite, samples, out_dir
+                    )
+                    results.append(cell)
+                    rep = cell["shared"]
+                    print(
+                        f"[OK]   {w:<16} {cell['group']:<18} "
+                        f"inst={k} step={cell['records'][0]['step_s']:.4f}s "
+                        f"fits={rep['fits']} "
+                        f"max_interf={cell['interference_quant']['max_slowdown']:.2f}x",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    print(f"[FAIL] {w} {mode.value} x{k}: {e}", flush=True)
+                    traceback.print_exc(limit=3)
     summary = {
         "cells": len(results),
         "failures": failures,

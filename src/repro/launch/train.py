@@ -141,6 +141,10 @@ def run(args) -> dict:
         "steps": args.steps - start_step,
         "final_loss": losses[-1] if losses else None,
         "first_loss": losses[0] if losses else None,
+        # window means: single-step losses on stochastic batches are too
+        # noisy to compare individually
+        "head_mean_loss": float(np.mean(losses[:5])) if losses else None,
+        "tail_mean_loss": float(np.mean(losses[-5:])) if losses else None,
         "mean_step_ms": float(np.mean(step_times[3:]) * 1e3) if len(step_times) > 3 else None,
         "wall_s": wall,
         "pipeline": pipeline.stats(),

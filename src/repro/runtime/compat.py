@@ -1,0 +1,37 @@
+"""JAX version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace around jax 0.5, and its replication-check parameter was
+renamed ``check_rep`` -> ``check_vma`` later still — so there is a version
+window where ``jax.shard_map`` exists but only accepts ``check_rep``. This
+wrapper accepts the new spelling and dispatches on the parameter the
+installed implementation actually takes.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def _impl():
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map
+
+
+_SHARD_MAP = _impl()
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_SHARD_MAP).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )

@@ -22,6 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models import module as nn
 from repro.models import transformer as tfm
+from repro.runtime.compat import shard_map
 from repro.sharding.plan import ShardingPlan
 
 
@@ -109,7 +110,7 @@ def pipeline_forward(
     if cfg.tie_embeddings:
         head = {"embed": params["embed"]}
 
-    fn = jax.shard_map(
+    fn = shard_map(
         stage_fn,
         mesh=mesh,
         in_specs=(

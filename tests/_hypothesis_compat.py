@@ -1,0 +1,56 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis is
+not installed, and the rest of each test file still collects and runs.
+
+Usage in a test module::
+
+    from _hypothesis_compat import given, settings, st
+
+When hypothesis is available these are the real thing. When it is not,
+``st.<anything>(...)`` returns inert placeholder strategies (so module-level
+strategy definitions still evaluate) and ``@given(...)`` marks the test as
+skipped. ``hypothesis`` is declared as the ``[test]`` extra in
+pyproject.toml, not a hard dependency.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder for a hypothesis strategy."""
+
+        def __init__(self, name: str):
+            self._name = name
+
+        def __repr__(self):
+            return f"<stub strategy {self._name}>"
+
+    class _StrategiesStub:
+        def __getattr__(self, name: str):
+            return lambda *args, **kwargs: _Strategy(name)
+
+    st = _StrategiesStub()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install .[test])"
+            )(fn)
+
+        return decorate
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

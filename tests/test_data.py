@@ -1,9 +1,8 @@
 """Synthetic data determinism + host pipeline ordering/accounting."""
 import time
 
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ShapeSuite
 from repro.configs.registry import get_config

@@ -1,9 +1,8 @@
 """Unit tests for the module substrate + sharding plan rules."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.models import module as nn
 

@@ -1,9 +1,8 @@
 """AdamW unit + property tests."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.optim import adamw
 
@@ -73,7 +72,9 @@ def test_gradient_compression_error_feedback():
     def body(g, e):
         return compression.ef_int8_psum(g, e, "pod")
 
-    mean, err = jax.shard_map(
+    from repro.runtime.compat import shard_map
+
+    mean, err = shard_map(
         body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
         check_vma=False,
     )(g, e0)

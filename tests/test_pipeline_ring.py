@@ -26,6 +26,7 @@ def test_ring_matmuls_match_oracles():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np, json
         from jax.sharding import PartitionSpec as P
+        from repro.runtime.compat import shard_map
         from repro.runtime.ring import ring_ag_matmul, ring_rs_matmul
 
         mesh = jax.make_mesh((4,), ("m",))
@@ -36,8 +37,8 @@ def test_ring_matmuls_match_oracles():
         def ag(xl, wl):
             return ring_ag_matmul(xl, wl, "m")
 
-        y = jax.shard_map(ag, mesh=mesh, in_specs=(P("m", None), P(None, "m")),
-                          out_specs=P("m", None), check_vma=False)(x, w)
+        y = shard_map(ag, mesh=mesh, in_specs=(P("m", None), P(None, "m")),
+                      out_specs=P("m", None), check_vma=False)(x, w)
         np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
                                    rtol=2e-5, atol=1e-5)
 
@@ -48,8 +49,8 @@ def test_ring_matmuls_match_oracles():
         def rs(xl, wl):
             return ring_rs_matmul(xl, wl, "m")
 
-        y2 = jax.shard_map(rs, mesh=mesh, in_specs=(P("m", None), P("m", None)),
-                           out_specs=P("m", None), check_vma=False)(x2, w2)
+        y2 = shard_map(rs, mesh=mesh, in_specs=(P("m", None), P("m", None)),
+                       out_specs=P("m", None), check_vma=False)(x2, w2)
         np.testing.assert_allclose(np.asarray(y2), np.asarray(x2 @ w2),
                                    rtol=2e-5, atol=1e-5)
         print(json.dumps({"ok": True}))

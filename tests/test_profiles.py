@@ -1,6 +1,5 @@
 """Property tests for the MIG-faithful slice algebra (hypothesis)."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.profiles import (
     EXCLUSIONS,

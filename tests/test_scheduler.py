@@ -1,8 +1,7 @@
 """Collocation scheduler + elastic repack: admission, packing, stragglers."""
 import dataclasses
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ShapeSuite
 from repro.core.collocation import CollocationScheduler, _PROFILE_ORDER

@@ -20,8 +20,12 @@ def _args(**overrides):
 
 
 def test_loss_decreases_over_training():
+    # Compare 5-step window means, not single steps: per-batch losses on the
+    # stochastic synthetic stream are noisy enough that first-vs-last single
+    # steps flip sign across seeds (seed 0 happened to rise 5.840 -> 5.868
+    # while seed 1 fell 5.948 -> 5.781 over the same 30 steps).
     r = run(_args(steps=30))
-    assert r["final_loss"] < r["first_loss"], r
+    assert r["tail_mean_loss"] < r["head_mean_loss"], r
     assert np.isfinite(r["final_loss"])
 
 
