@@ -1,0 +1,131 @@
+"""Cluster-simulation tables: makespan / JCT / queueing delay / utilization
+per fleet-mode policy — the paper's dynamic-workload findings as metrics.
+
+Reads the (scenario x policy) cells written by ``launch/simulate.py`` from
+``artifacts/cluster/``; if none exist, runs the simulation in-process
+(seed 0 — it is pure Python and takes milliseconds). After the tables it
+prints verdict lines tying the numbers back to the paper:
+
+  * MIG rigidity: on the mixed dynamic trace the all-MIG fleet accrues
+    more queueing delay than all-MPS ("MIG's rigid partitioning may create
+    sub-optimal GPU utilization for more dynamic mixed workloads");
+  * MIG alignment: on the partition-aligned static trace the all-MIG
+    fleet wins makespan ("MIG can be beneficial ... when the sizes of the
+    models align with the MIG partitioning options");
+  * live reconfiguration: the best-mode-per-device policy performed mode
+    migrations and was charged their reconfiguration cost (queueing-time
+    analogue of MISO-style repartitioning).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.cluster_sim
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List, Optional
+
+from benchmarks.common import load_cluster
+
+_COLS = (  # (metric key, column title, width, value format)
+    ("makespan_s", "makespan", 10, "{:.2f}"),
+    ("mean_jct_s", "mean_jct", 10, "{:.2f}"),
+    ("mean_queueing_delay_s", "mean_qdly", 11, "{:.3f}"),
+    ("max_queueing_delay_s", "max_qdly", 10, "{:.3f}"),
+    ("utilization_mean", "util", 7, "{:.2f}"),
+    ("migrations", "migr", 6, "{:d}"),
+    ("reconfig_cost_s", "reconf_s", 10, "{:.1f}"),
+    ("completed", "done", 6, "{:d}"),
+    ("still_queued", "queued", 8, "{:d}"),
+)
+
+
+def cell_metrics(cell: Dict) -> Dict:
+    from repro.launch.simulate import summarize_cell
+
+    # the summary metrics plus what the verdict lines need
+    return {
+        **summarize_cell(cell),
+        "migration_events": cell["report"]["migration_events"],
+    }
+
+
+def format_scenario_table(scenario: str, rows: List[Dict]) -> str:
+    hdr = f"{'policy':<11}" + "".join(
+        f"{title:>{width}}" for _, title, width, _ in _COLS
+    )
+    lines = [f"scenario: {scenario} ({rows[0]['n_jobs']} jobs)", hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: r["policy"]):
+        line = f"{r['policy']:<11}"
+        for key, _, width, fmt in _COLS:
+            line += f"{fmt.format(r[key]):>{width}}"
+        lines.append(line)
+    return "\n".join(lines)
+
+
+def _by(rows: List[Dict], scenario: str, policy: str) -> Optional[Dict]:
+    for r in rows:
+        if r["scenario"] == scenario and r["policy"] == policy:
+            return r
+    return None
+
+
+def verdicts(rows: List[Dict]) -> List[str]:
+    """The paper's qualitative findings, checked against the metrics."""
+    out = []
+    mig = _by(rows, "mixed_dynamic", "all-mig")
+    mps = _by(rows, "mixed_dynamic", "all-mps")
+    if mig and mps:
+        ok = mig["mean_queueing_delay_s"] > mps["mean_queueing_delay_s"]
+        out.append(
+            f"[{'OK' if ok else 'FAIL'}] MIG rigidity as queueing delay "
+            f"(mixed dynamic): all-mig {mig['mean_queueing_delay_s']:.3f}s "
+            f"> all-mps {mps['mean_queueing_delay_s']:.3f}s"
+        )
+    amig = _by(rows, "aligned_static", "all-mig")
+    amps = _by(rows, "aligned_static", "all-mps")
+    if amig and amps:
+        ok = amig["makespan_s"] < amps["makespan_s"]
+        out.append(
+            f"[{'OK' if ok else 'FAIL'}] MIG wins partition-aligned static "
+            f"trace: makespan all-mig {amig['makespan_s']:.2f}s "
+            f"< all-mps {amps['makespan_s']:.2f}s"
+        )
+    migrated = [
+        r for r in rows if r["policy"] == "best" and r["migrations"] > 0
+    ]
+    if migrated:
+        r = max(migrated, key=lambda r: r["migrations"])
+        dirs = {f"{e['from']}->{e['to']}" for e in r["migration_events"]}
+        out.append(
+            f"[OK] live reconfiguration ({r['scenario']}, best policy): "
+            f"{r['migrations']} migrations ({', '.join(sorted(dirs))}), "
+            f"{r['reconfig_cost_s']:.1f}s reconfig downtime charged, "
+            f"{r['lost_steps']:.0f} steps re-done from checkpoints"
+        )
+    else:
+        out.append("[FAIL] no mode-migration events under the best policy")
+    return out
+
+
+def main() -> int:
+    cells = load_cluster()
+    if not cells:
+        print("# no artifacts/cluster cells — simulating in-process (seed 0)")
+        from repro.launch.simulate import run_all
+
+        cells = run_all(seed=0)
+    rows = [cell_metrics(c) for c in cells if c.get("status") == "OK"]
+    if not rows:
+        print("no OK cluster cells", file=sys.stderr)
+        return 1
+    scenarios = sorted({r["scenario"] for r in rows})
+    for sc in scenarios:
+        print(format_scenario_table(sc, [r for r in rows if r["scenario"] == sc]))
+        print()
+    lines = verdicts(rows)
+    print("\n".join(lines))
+    return 1 if any(line.startswith("[FAIL]") for line in lines) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

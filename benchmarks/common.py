@@ -8,6 +8,7 @@ from typing import Dict, List, Optional
 ROOT = Path(__file__).resolve().parent.parent
 COLLOCATION_DIR = ROOT / "artifacts" / "collocation"
 DRYRUN_DIR = ROOT / "artifacts" / "dryrun"
+CLUSTER_DIR = ROOT / "artifacts" / "cluster"
 
 # paper reference numbers (Section 4.1, resnet_small/medium/large)
 PAPER = {
@@ -26,6 +27,17 @@ def load_collocation() -> List[Dict]:
     cells = []
     if COLLOCATION_DIR.exists():
         for f in sorted(COLLOCATION_DIR.glob("*.json")):
+            if f.name.startswith("_"):
+                continue
+            cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def load_cluster() -> List[Dict]:
+    """Cluster-simulation cells written by launch/simulate.py."""
+    cells = []
+    if CLUSTER_DIR.exists():
+        for f in sorted(CLUSTER_DIR.glob("*.json")):
             if f.name.startswith("_"):
                 continue
             cells.append(json.loads(f.read_text()))

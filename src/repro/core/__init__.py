@@ -2,12 +2,26 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 
-# Public mode API (kept dependency-light: sharing pulls in no jax).
+# Public mode API (kept dependency-light: nothing here pulls in jax).
 from repro.core.sharing import (  # noqa: F401
     CollocationMode,
     SharedModeReport,
     SoloProfile,
+    device_busy_fraction,
     mps_contention,
     naive_contention,
     shared_mode_report,
 )
+
+# Event-driven cluster API (dynamic arrivals, per-device modes, live
+# reconfiguration). The whole scheduling stack is jax-free at import time
+# (core/instance.py defers jax to InstanceRuntime), so the simulator runs
+# without touching an accelerator runtime.
+from repro.core.cluster import (  # noqa: F401
+    Cluster,
+    ClusterJob,
+    ClusterReport,
+    DeviceState,
+)
+from repro.core.events import Event, EventKind, EventQueue  # noqa: F401
+from repro.core.queueing import AdmissionQueue  # noqa: F401

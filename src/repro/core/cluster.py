@@ -1,0 +1,777 @@
+"""Event-driven multi-device cluster: dynamic arrivals, live reconfiguration.
+
+The one-shot ``CollocationScheduler.schedule(jobs)`` answers the paper's
+*static* question — how should a fixed batch share one device. Its sharpest
+*temporal* finding ("MIG's rigid partitioning may create sub-optimal GPU
+utilization for more dynamic mixed workloads") needs an always-on cluster:
+jobs arrive over time, finish, free capacity, and the fleet's partitioning
+decisions age as the mix drifts. This module is that state machine.
+
+A ``Cluster`` owns N ``DeviceState``s — a heterogeneous fleet where each
+device has its own ``CollocationMode`` (some MIG-partitioned, others
+MPS/naive-shared) and its own ``CollocationScheduler`` instance holding the
+per-device placement and straggler state. The cluster is driven by a
+discrete-event loop (core/events.py):
+
+  submit(job, arrival_s)  pushes an ARRIVAL; at fire time the job enters
+                          the priority + backfill admission queue
+                          (core/queueing.py) — *waiting replaces the
+                          one-shot scheduler's "reject forever"*; only jobs
+                          that cannot run on any empty device under any
+                          allowed mode are rejected outright;
+  COMPLETION              derived from the job's predicted step time x its
+                          remaining steps (epoch_time_s x epochs algebra);
+                          frees capacity, re-times shared neighbours whose
+                          contention just dropped, and re-drains the queue;
+  FAILURE / REPAIR        slice-unit health events; the MIG path reuses the
+                          elastic-repack split (core/elastic.py) — jobs on
+                          intersecting instances die, survivors keep
+                          running untouched (F3); on a *shared* device any
+                          failure kills every job (no isolation — F3's
+                          contrapositive);
+  RECONFIG_DONE           ends a mode migration and re-opens the device.
+
+Mode migration is the dynamic half of the paper made executable: under the
+``adaptive`` policy, whenever the (running + queued) composition drifts,
+each device re-runs the ``best_mode`` ranking (collocation.rank_modes) and
+— if another mode would serve strictly more of the mix, or the same number
+at meaningfully higher throughput — re-partitions live. The cost is charged
+with the existing checkpoint-store semantics (checkpoint/store.py): a
+checkpoint is valid at epoch granularity, so every displaced job rolls its
+progress back to the last completed epoch (work since the last manifest is
+lost and re-done), re-enters the queue priority-bumped like an elastic
+repack victim, and the device is down for ``reconfig_cost_s`` while it
+re-partitions. That charge is exactly what lets the simulator reproduce
+MIG rigidity as *measured queueing delay* rather than prose: an all-MIG
+fleet on a mixed dynamic trace accrues waiting time that an all-MPS fleet
+does not, while MIG still wins the partition-aligned static trace
+(benchmarks/cluster_sim.py prints both).
+
+Straggler mitigation folds in as an event handler too: ``observe_step``
+feeds the per-device EMA, and a flagged straggler is checkpointed,
+re-queued with a ``min_profile`` floor one profile larger (the repack_plan
+suggestion), and re-placed — the one-shot plan turned into a live action.
+
+Determinism: given the same submitted trace, every run is bit-identical —
+events tie-break in push order, queues order by (priority, arrival, seq),
+and nothing reads wall clocks or unseeded RNG. launch/simulate.py layers a
+seeded synthetic arrival-trace generator on top and tests/test_cluster.py
+pins byte-identical artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from repro.core.collocation import (
+    Assignment,
+    CharKey,
+    CollocationScheduler,
+    Schedule,
+    rank_modes,
+)
+from repro.core.elastic import REQUEUE_PRIORITY_BUMP, split_by_failure
+from repro.core.events import Event, EventKind, EventQueue
+from repro.core.instance import JobSpec
+from repro.core.profiles import N_UNITS, PROFILES
+from repro.core.queueing import AdmissionQueue
+from repro.core.sharing import CollocationMode, device_busy_fraction
+
+# Live re-partitioning penalty: drain + MIG instance destroy/create + MPS
+# daemon restart + checkpoint restore of the displaced jobs. Charged per
+# migration on top of the per-job epoch rollback.
+DEFAULT_RECONFIG_COST_S = 2.0
+
+# Checkpoint cadence the rollback models: train.py saves one manifest per
+# epoch, and checkpoint/store.py makes a checkpoint visible only once its
+# manifest lands — so a displaced job resumes from the last *epoch* boundary.
+CHECKPOINT_EVERY_EPOCHS = 1
+
+
+@dataclasses.dataclass
+class ClusterJob:
+    """A submitted job plus its simulation state."""
+
+    spec: JobSpec
+    arrival_s: float
+    epochs: int = 1
+    samples_per_epoch: int = 3200
+    # -- runtime state ------------------------------------------------------
+    steps_done: float = 0.0
+    step_s: float = 0.0  # current effective step time on its device
+    device: Optional[str] = None
+    last_update_s: float = 0.0
+    started_s: Optional[float] = None  # first placement (queueing delay end)
+    finished_s: Optional[float] = None
+    migrations: int = 0
+    straggler_repacks: int = 0
+    lost_steps: float = 0.0  # progress re-done after checkpoint rollbacks
+    token: int = 0  # completion-event generation (lazy invalidation)
+    rejected_reason: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return max(1, -(-self.samples_per_epoch // self.spec.suite.global_batch))
+
+    @property
+    def total_steps(self) -> int:
+        return self.steps_per_epoch * self.epochs
+
+    @property
+    def remaining_steps(self) -> float:
+        return max(0.0, self.total_steps - self.steps_done)
+
+    @property
+    def queueing_delay_s(self) -> Optional[float]:
+        if self.started_s is None:
+            return None
+        return self.started_s - self.arrival_s
+
+    @property
+    def jct_s(self) -> Optional[float]:
+        if self.finished_s is None:
+            return None
+        return self.finished_s - self.arrival_s
+
+    def rollback_to_checkpoint(self) -> float:
+        """Roll progress back to the last saved checkpoint; return the lost
+        steps (the reconfiguration charge beyond the device downtime)."""
+        cadence = self.steps_per_epoch * CHECKPOINT_EVERY_EPOCHS
+        kept = math.floor(self.steps_done / cadence) * cadence
+        lost = self.steps_done - kept
+        self.steps_done = float(kept)
+        self.lost_steps += lost
+        return lost
+
+    def to_row(self) -> Dict:
+        return {
+            "name": self.name,
+            "arch": self.spec.arch,
+            "priority": self.spec.priority,
+            "arrival_s": self.arrival_s,
+            "started_s": self.started_s,
+            "finished_s": self.finished_s,
+            "queueing_delay_s": self.queueing_delay_s,
+            "jct_s": self.jct_s,
+            "total_steps": self.total_steps,
+            "migrations": self.migrations,
+            "straggler_repacks": self.straggler_repacks,
+            "lost_steps": self.lost_steps,
+            "rejected_reason": self.rejected_reason,
+        }
+
+
+@dataclasses.dataclass
+class DeviceState:
+    """One device of the fleet: its mode, scheduler, and live placements."""
+
+    name: str
+    mode: CollocationMode
+    scheduler: CollocationScheduler
+    running: Dict[str, ClusterJob] = dataclasses.field(default_factory=dict)
+    assignments: Dict[str, Assignment] = dataclasses.field(default_factory=dict)
+    failed_units: Set[int] = dataclasses.field(default_factory=set)
+    reconfiguring_until: float = float("-inf")
+    pending_mode: Optional[CollocationMode] = None
+    migrations: int = 0
+    reconfig_cost_s: float = 0.0
+    last_migration_s: float = float("-inf")
+    straggler_repacks: int = 0
+    busy_integral_s: float = 0.0
+    last_busy_update_s: float = 0.0
+    mode_history: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+
+    def available(self, t: float) -> bool:
+        return t >= self.reconfiguring_until
+
+    def occupied_units(self) -> Set[int]:
+        occ = set(self.failed_units)
+        for a in self.assignments.values():
+            if a.profile == "7g.40gb":
+                occ |= set(range(N_UNITS))
+            else:
+                s0, s1 = a.placement.span
+                occ |= set(range(s0, s1))
+        return occ
+
+    def to_row(self) -> Dict:
+        return {
+            "name": self.name,
+            "mode": self.mode.value,
+            "mode_history": list(self.mode_history),
+            "migrations": self.migrations,
+            "reconfig_cost_s": self.reconfig_cost_s,
+            "straggler_repacks": self.straggler_repacks,
+            "failed_units": sorted(self.failed_units),
+        }
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """End-of-run metrics — the currency benchmarks/cluster_sim.py prints."""
+
+    policy: str
+    n_devices: int
+    horizon_s: float
+    makespan_s: float
+    completed: int
+    rejected: int
+    still_queued: int
+    still_running: int
+    mean_jct_s: float
+    p95_jct_s: float
+    mean_queueing_delay_s: float
+    max_queueing_delay_s: float
+    throughput_jobs_per_s: float
+    utilization: Dict[str, float]  # device -> busy fraction, plus "mean"
+    migrations: int
+    reconfig_cost_s: float
+    lost_steps: float
+    straggler_repacks: int
+    hol_blocked_events: int
+    jobs: List[Dict]
+    devices: List[Dict]
+    migration_events: List[Dict]
+    failure_events: List[Dict]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _quantile(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+class Cluster:
+    """N devices + admission queue + event loop; see module docstring."""
+
+    def __init__(
+        self,
+        char_db: Dict[CharKey, dict],
+        devices: Sequence[Tuple[str, Union[CollocationMode, str]]],
+        *,
+        policy: str = "static",  # "static" | "adaptive"
+        reconfig_cost_s: float = DEFAULT_RECONFIG_COST_S,
+        migration_cooldown_s: float = 5.0,
+        migration_hysteresis: float = 0.10,
+        migration_window: int = 8,
+        scheduler_kwargs: Optional[Dict] = None,
+    ):
+        if policy not in ("static", "adaptive"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.policy = policy
+        self.reconfig_cost_s = float(reconfig_cost_s)
+        self.migration_cooldown_s = float(migration_cooldown_s)
+        self.migration_hysteresis = float(migration_hysteresis)
+        self.migration_window = int(migration_window)
+        kwargs = scheduler_kwargs or {}
+        self.devices: Dict[str, DeviceState] = {}
+        for name, mode in devices:
+            mode = CollocationMode(mode)
+            self.devices[name] = DeviceState(
+                name=name,
+                mode=mode,
+                scheduler=CollocationScheduler(char_db, mode=mode, **kwargs),
+            )
+        if not self.devices:
+            raise ValueError("a cluster needs at least one device")
+        self.events = EventQueue()
+        self.queue = AdmissionQueue()
+        self.jobs: Dict[str, ClusterJob] = {}
+        self.now = 0.0
+        self.completed: List[str] = []
+        self.rejected: List[Tuple[str, str]] = []
+        self.migration_events: List[Dict] = []
+        self.failure_events: List[Dict] = []
+
+    # -- trace input -----------------------------------------------------------
+
+    def submit(
+        self,
+        spec: JobSpec,
+        arrival_s: float,
+        *,
+        epochs: int = 1,
+        samples_per_epoch: int = 3200,
+    ) -> ClusterJob:
+        """Register a job to arrive at ``arrival_s`` (dynamic arrival)."""
+        if spec.name in self.jobs:
+            raise KeyError(f"job {spec.name!r} already submitted")
+        cj = ClusterJob(
+            spec=spec,
+            arrival_s=float(arrival_s),
+            epochs=int(epochs),
+            samples_per_epoch=int(samples_per_epoch),
+        )
+        self.jobs[spec.name] = cj
+        self.events.push(arrival_s, EventKind.ARRIVAL, (spec.name,))
+        return cj
+
+    def inject_failure(self, device: str, units: Sequence[int], at_s: float) -> None:
+        self.events.push(at_s, EventKind.FAILURE, (device, tuple(units)))
+
+    def inject_repair(self, device: str, units: Sequence[int], at_s: float) -> None:
+        self.events.push(at_s, EventKind.REPAIR, (device, tuple(units)))
+
+    # -- event loop --------------------------------------------------------------
+
+    def tick(self) -> Optional[Event]:
+        """Process the next event; returns it (None if the heap is empty)."""
+        if not self.events:
+            return None
+        ev = self.events.pop()
+        self.now = max(self.now, ev.time_s)
+        t = ev.time_s
+        if ev.kind == EventKind.ARRIVAL:
+            self._on_arrival(ev.payload[0], t)
+        elif ev.kind == EventKind.COMPLETION:
+            self._on_completion(*ev.payload, t=t)
+        elif ev.kind == EventKind.RECONFIG_DONE:
+            self._on_reconfig_done(ev.payload[0], t)
+        elif ev.kind == EventKind.FAILURE:
+            self._on_failure(ev.payload[0], ev.payload[1], t)
+        elif ev.kind == EventKind.REPAIR:
+            self._on_repair(ev.payload[0], ev.payload[1], t)
+        return ev
+
+    def run_until(self, t_end: float) -> None:
+        while self.events and self.events.peek_time() <= t_end:
+            self.tick()
+        self.now = max(self.now, t_end)
+
+    def run(self) -> "ClusterReport":
+        """Drain every event and return the end-of-run report."""
+        while self.events:
+            self.tick()
+        return self.report()
+
+    # -- handlers ---------------------------------------------------------------
+
+    def _on_arrival(self, name: str, t: float) -> None:
+        cj = self.jobs[name]
+        reason = self._definitely_unplaceable(cj.spec)
+        if reason is not None:
+            cj.rejected_reason = reason
+            self.rejected.append((name, reason))
+            return
+        self.queue.push(name, cj, priority=cj.spec.priority, enqueued_s=t)
+        self._dispatch(t)
+        self._maybe_migrate(t)
+
+    def _on_completion(self, dev_name: str, name: str, token: int, *, t: float) -> None:
+        dev = self.devices[dev_name]
+        cj = self.jobs[name]
+        if cj.token != token or name not in dev.running:
+            return  # stale event — the job was re-timed, migrated, or killed
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        cj.steps_done = float(cj.total_steps)  # clamp fp residue
+        cj.finished_s = t
+        cj.device = None
+        del dev.running[name]
+        del dev.assignments[name]
+        self.completed.append(name)
+        if dev.mode != CollocationMode.MIG and dev.running:
+            # a departure lowers the contention factors for every neighbour
+            self._retime_shared(dev, t)
+        self._dispatch(t)
+        self._maybe_migrate(t)
+
+    def _on_reconfig_done(self, dev_name: str, t: float) -> None:
+        dev = self.devices[dev_name]
+        self._accrue_busy(dev, t)
+        if dev.pending_mode is not None:
+            dev.mode = dev.pending_mode
+            dev.scheduler.mode = dev.pending_mode
+            dev.pending_mode = None
+            dev.mode_history.append((t, dev.mode.value))
+        self._dispatch(t)
+
+    def _on_failure(self, dev_name: str, units: Sequence[int], t: float) -> None:
+        dev = self.devices[dev_name]
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        dev.failed_units |= set(units)
+        if dev.mode == CollocationMode.MIG:
+            killed_specs, survivors = split_by_failure(
+                list(dev.assignments.values()), dev.failed_units
+            )
+            survivor_names = {a.job.name for a in survivors}
+        else:
+            # no isolation on a shared device: every job dies with it
+            killed_specs = [
+                dataclasses.replace(
+                    cj.spec, priority=cj.spec.priority + REQUEUE_PRIORITY_BUMP
+                )
+                for cj in dev.running.values()
+            ]
+            survivor_names = set()
+        killed_names = []
+        for spec in killed_specs:
+            killed_names.append(spec.name)
+            self._displace(dev, spec.name, t, new_spec=spec)
+        self.failure_events.append(
+            {
+                "t_s": t,
+                "device": dev_name,
+                "units": sorted(set(units)),
+                "killed": killed_names,
+                "survivors": sorted(survivor_names),
+            }
+        )
+        self._dispatch(t)
+        self._maybe_migrate(t)
+
+    def _on_repair(self, dev_name: str, units: Sequence[int], t: float) -> None:
+        dev = self.devices[dev_name]
+        self._accrue_busy(dev, t)
+        dev.failed_units -= set(units)
+        self._dispatch(t)
+        self._maybe_migrate(t)
+
+    # -- admission: priority + backfill -------------------------------------------
+
+    def _definitely_unplaceable(self, spec: JobSpec) -> Optional[str]:
+        """A job is rejected outright only if no device could run it even
+        empty, under any mode the policy allows — everything else waits.
+
+        Every device shares one char DB, so an empty-device trial depends
+        only on the mode: dedupe to one trial per reachable mode instead
+        of one per (device, mode)."""
+        if self.policy == "adaptive":
+            modes = tuple(CollocationMode)
+        else:
+            modes = tuple(dict.fromkeys(d.mode for d in self.devices.values()))
+        scheduler = next(iter(self.devices.values())).scheduler
+        last_reason = "no devices"
+        for m in modes:
+            trial = scheduler.schedule([spec], mode=m)
+            if trial.assignments:
+                return None
+            if trial.rejections:
+                last_reason = trial.rejections[0].reason
+        return f"unplaceable on any empty device: {last_reason}"
+
+    def _dispatch(self, t: float) -> None:
+        """Drain the admission queue: strict priority order with backfill —
+        a blocked high-priority job does not stop later entries that fit."""
+        blocked_any = False
+        for entry in self.queue.ordered():
+            cj = entry.item
+            placed = False
+            for dev in self.devices.values():
+                if self._try_place(dev, cj, t):
+                    placed = True
+                    break
+            if placed:
+                self.queue.remove(entry.key)
+                if cj.started_s is None:
+                    cj.started_s = t
+                if blocked_any:
+                    self.queue.note_backfill_overtake()
+            else:
+                blocked_any = True
+
+    def _try_place(self, dev: DeviceState, cj: ClusterJob, t: float) -> bool:
+        if not dev.available(t):
+            return False
+        if dev.mode == CollocationMode.MIG:
+            sched = dev.scheduler.schedule(
+                [cj.spec],
+                blocked_units=frozenset(dev.failed_units),
+                mode=CollocationMode.MIG,
+                existing=[a.placement for a in dev.assignments.values()],
+            )
+            if not sched.assignments:
+                return False
+            self._accrue_busy(dev, t)
+            a = sched.assignments[0]
+            dev.assignments[cj.name] = a
+            dev.running[cj.name] = cj
+            cj.device = dev.name
+            cj.step_s = a.predicted_step_s
+            cj.last_update_s = t
+            self._schedule_completion(dev, cj, t)
+            return True
+        # shared device (naive / MPS): re-admit the whole set so the mode's
+        # contention model re-times everyone; the candidate is admitted only
+        # if every already-running job keeps its place (no preemption).
+        if dev.failed_units:
+            return False  # degraded shared device takes no new work
+        specs = [j.spec for j in dev.running.values()] + [cj.spec]
+        sched = dev.scheduler.schedule(specs, mode=dev.mode)
+        placed_names = {a.job.name for a in sched.assignments}
+        if cj.name not in placed_names:
+            return False
+        if not all(n in placed_names for n in dev.running):
+            return False
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        dev.running[cj.name] = cj
+        cj.device = dev.name
+        cj.last_update_s = t
+        for a in sched.assignments:
+            j = dev.running[a.job.name]
+            j.step_s = a.predicted_step_s
+            dev.assignments[a.job.name] = a
+            self._schedule_completion(dev, j, t)
+        return True
+
+    def _retime_shared(self, dev: DeviceState, t: float) -> None:
+        """Re-run the contention model after a departure (progress must
+        already be up to date at ``t``)."""
+        sched = dev.scheduler.schedule(
+            [j.spec for j in dev.running.values()], mode=dev.mode
+        )
+        for a in sched.assignments:
+            j = dev.running[a.job.name]
+            j.step_s = a.predicted_step_s
+            dev.assignments[a.job.name] = a
+            self._schedule_completion(dev, j, t)
+
+    def _schedule_completion(self, dev: DeviceState, cj: ClusterJob, t: float) -> None:
+        cj.token += 1
+        finish = t + cj.remaining_steps * cj.step_s
+        self.events.push(finish, EventKind.COMPLETION, (dev.name, cj.name, cj.token))
+
+    # -- progress & utilization accounting ------------------------------------------
+
+    def _update_progress(self, dev: DeviceState, t: float) -> None:
+        for j in dev.running.values():
+            if j.step_s > 0:
+                j.steps_done = min(
+                    float(j.total_steps),
+                    j.steps_done + (t - j.last_update_s) / j.step_s,
+                )
+            j.last_update_s = t
+
+    def _busy_fraction(self, dev: DeviceState) -> float:
+        if not dev.running:
+            return 0.0
+        if dev.mode == CollocationMode.MIG:
+            # unit-weighted occupancy — the device-level GRACT aggregation
+            # of core/metrics.py with active instances counted as busy
+            occupied = sum(
+                PROFILES[a.profile].mem_units for a in dev.assignments.values()
+            )
+            return min(1.0, occupied / N_UNITS)
+        profiles = [
+            p
+            for p in (dev.scheduler.solo_profile(j.spec) for j in dev.running.values())
+            if p is not None
+        ]
+        return device_busy_fraction(profiles)
+
+    def _accrue_busy(self, dev: DeviceState, t: float) -> None:
+        """Integrate the device's busy fraction up to ``t`` — call BEFORE
+        mutating the running set so the old occupancy covers the interval."""
+        dt = t - dev.last_busy_update_s
+        if dt > 0:
+            dev.busy_integral_s += self._busy_fraction(dev) * dt
+            dev.last_busy_update_s = t
+
+    # -- displacement (failure / migration / straggler repack) ----------------------
+
+    def _displace(
+        self,
+        dev: DeviceState,
+        name: str,
+        t: float,
+        *,
+        new_spec: Optional[JobSpec] = None,
+        count_migration: bool = False,
+        count_repack: bool = False,
+    ) -> None:
+        """Kill a running job, roll it back to its last checkpoint, and
+        re-queue it (priority-bumped) — the shared tail of the failure,
+        migration, and straggler-repack handlers."""
+        cj = dev.running.pop(name)
+        dev.assignments.pop(name, None)
+        cj.rollback_to_checkpoint()
+        cj.token += 1  # invalidate the in-flight completion event
+        cj.device = None
+        if new_spec is not None:
+            cj.spec = new_spec
+        if count_migration:
+            cj.migrations += 1
+        if count_repack:
+            cj.straggler_repacks += 1
+        self.queue.push(name, cj, priority=cj.spec.priority, enqueued_s=t)
+
+    # -- mode migration ---------------------------------------------------------
+
+    def _maybe_migrate(self, t: float) -> None:
+        if self.policy != "adaptive":
+            return
+        for dev in self.devices.values():
+            if not dev.available(t):
+                continue
+            if not self.queue:
+                # no queue pressure: the composition has not outgrown the
+                # current partitioning, so reconfiguring (and killing the
+                # running jobs back to their checkpoints) cannot pay off
+                continue
+            specs = [j.spec for j in dev.running.values()] + [
+                e.item.spec
+                for e in self.queue.ordered()[: self.migration_window]
+            ]
+            if not specs:
+                continue
+            if dev.running and t - dev.last_migration_s < self.migration_cooldown_s:
+                continue  # empty devices may flip freely (nothing to kill)
+            snapshot = dict(dev.scheduler._predicted)
+            schedules: Dict[CollocationMode, Schedule] = {}
+            for m in CollocationMode:
+                if m == CollocationMode.MIG:
+                    schedules[m] = dev.scheduler.schedule(
+                        specs,
+                        blocked_units=frozenset(dev.failed_units),
+                        mode=m,
+                    )
+                elif dev.failed_units:
+                    # a degraded device cannot run a shared mode at all
+                    # (_try_place refuses it), so the trial must be empty —
+                    # otherwise a failed-unit MIG device would "migrate" to
+                    # MPS and then strand every job
+                    schedules[m] = Schedule([], [], mode=m)
+                else:
+                    schedules[m] = dev.scheduler.schedule(specs, mode=m)
+            # trial schedules must not poison the straggler predictions of
+            # the jobs actually deployed
+            dev.scheduler._predicted = snapshot
+            best = rank_modes(schedules)
+            if best == dev.mode:
+                continue
+            cur, cand = schedules[dev.mode], schedules[best]
+            better = len(cand.assignments) > len(cur.assignments) or (
+                len(cand.assignments) == len(cur.assignments)
+                and cand.throughput()
+                >= (1 + self.migration_hysteresis) * cur.throughput()
+            )
+            if better:
+                self._migrate(dev, best, t)
+
+    def _migrate(self, dev: DeviceState, new_mode: CollocationMode, t: float) -> None:
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        requeued = []
+        for name in list(dev.running):
+            cj = dev.running[name]
+            bumped = dataclasses.replace(
+                cj.spec, priority=cj.spec.priority + REQUEUE_PRIORITY_BUMP
+            )
+            self._displace(dev, name, t, new_spec=bumped, count_migration=True)
+            requeued.append(name)
+        dev.pending_mode = new_mode
+        dev.reconfiguring_until = t + self.reconfig_cost_s
+        dev.migrations += 1
+        dev.reconfig_cost_s += self.reconfig_cost_s
+        dev.last_migration_s = t
+        self.migration_events.append(
+            {
+                "t_s": t,
+                "device": dev.name,
+                "from": dev.mode.value,
+                "to": new_mode.value,
+                "requeued": requeued,
+                "reconfig_cost_s": self.reconfig_cost_s,
+            }
+        )
+        self.events.push(t + self.reconfig_cost_s, EventKind.RECONFIG_DONE, (dev.name,))
+
+    # -- straggler mitigation (EMA -> live repack) -----------------------------------
+
+    def observe_step(self, job_name: str, step_s: float, at_s: Optional[float] = None) -> None:
+        """Feed a measured step time into the owning device's straggler EMA
+        and act on any job that drifted past tolerance: checkpoint it and
+        re-queue it with a ``min_profile`` floor one profile up (the
+        repack_plan suggestion made live)."""
+        t = self.now if at_s is None else float(at_s)
+        self.now = max(self.now, t)
+        cj = self.jobs.get(job_name)
+        if cj is None or cj.device is None:
+            return
+        dev = self.devices[cj.device]
+        dev.scheduler.observe_step(job_name, step_s)
+        if dev.mode != CollocationMode.MIG:
+            return  # shared modes have no bigger slice to repack onto
+        sched = Schedule(list(dev.assignments.values()), [], mode=CollocationMode.MIG)
+        plan = dev.scheduler.repack_plan(sched)
+        acted = False
+        for name, bigger in plan.items():
+            if name not in dev.running:
+                continue
+            if not acted:
+                self._accrue_busy(dev, t)
+                self._update_progress(dev, t)
+                acted = True
+            jc = dev.running[name]
+            bumped = dataclasses.replace(
+                jc.spec,
+                priority=jc.spec.priority + REQUEUE_PRIORITY_BUMP,
+                min_profile=bigger,
+            )
+            self._displace(dev, name, t, new_spec=bumped, count_repack=True)
+            dev.scheduler.reset_observation(name)
+            dev.straggler_repacks += 1
+        if acted:
+            self._dispatch(t)
+
+    # -- reporting --------------------------------------------------------------
+
+    def report(self) -> ClusterReport:
+        horizon = self.now
+        for dev in self.devices.values():
+            self._accrue_busy(dev, horizon)
+        done = [self.jobs[n] for n in self.completed]
+        jcts = sorted(j.jct_s for j in done)
+        delays = sorted(
+            j.queueing_delay_s
+            for j in self.jobs.values()
+            if j.queueing_delay_s is not None
+        )
+        arrivals = [j.arrival_s for j in self.jobs.values() if j.rejected_reason is None]
+        finishes = [j.finished_s for j in done]
+        makespan = (max(finishes) - min(arrivals)) if finishes and arrivals else 0.0
+        util = {
+            d.name: (d.busy_integral_s / horizon if horizon > 0 else 0.0)
+            for d in self.devices.values()
+        }
+        util["mean"] = sum(util.values()) / len(self.devices)
+        return ClusterReport(
+            policy=self.policy,
+            n_devices=len(self.devices),
+            horizon_s=horizon,
+            makespan_s=makespan,
+            completed=len(self.completed),
+            rejected=len(self.rejected),
+            still_queued=len(self.queue),
+            still_running=sum(len(d.running) for d in self.devices.values()),
+            mean_jct_s=sum(jcts) / len(jcts) if jcts else 0.0,
+            p95_jct_s=_quantile(jcts, 0.95),
+            mean_queueing_delay_s=sum(delays) / len(delays) if delays else 0.0,
+            max_queueing_delay_s=delays[-1] if delays else 0.0,
+            throughput_jobs_per_s=(
+                len(self.completed) / makespan if makespan > 0 else 0.0
+            ),
+            utilization=util,
+            migrations=sum(d.migrations for d in self.devices.values()),
+            reconfig_cost_s=sum(d.reconfig_cost_s for d in self.devices.values()),
+            lost_steps=sum(j.lost_steps for j in self.jobs.values()),
+            straggler_repacks=sum(
+                d.straggler_repacks for d in self.devices.values()
+            ),
+            hol_blocked_events=self.queue.hol_blocked_events,
+            jobs=[j.to_row() for j in self.jobs.values()],
+            devices=[d.to_row() for d in self.devices.values()],
+            migration_events=list(self.migration_events),
+            failure_events=list(self.failure_events),
+        )

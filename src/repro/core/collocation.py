@@ -117,7 +117,26 @@ _FULL_PROFILE = "7g.40gb"
 
 # Preference when modes tie on (jobs placed, aggregate throughput): the
 # paper recommends MPS as the most flexible, MIG next, naive last.
-_MODE_PREFERENCE = (CollocationMode.MPS, CollocationMode.MIG, CollocationMode.NAIVE)
+MODE_PREFERENCE = (CollocationMode.MPS, CollocationMode.MIG, CollocationMode.NAIVE)
+_MODE_PREFERENCE = MODE_PREFERENCE  # backwards-compat alias
+
+
+def rank_modes(schedules: Dict[CollocationMode, Schedule]) -> CollocationMode:
+    """Winner under the lexicographic ranking ``best_mode`` documents:
+    (jobs placed, aggregate throughput), ties broken by MODE_PREFERENCE.
+
+    Shared with the cluster's migration policy (core/cluster.py), which
+    evaluates candidate schedules without committing the scheduler's
+    straggler-prediction state the way ``best_mode`` does.
+    """
+    return max(
+        schedules,
+        key=lambda m: (
+            len(schedules[m].assignments),
+            schedules[m].throughput(),
+            -MODE_PREFERENCE.index(m),
+        ),
+    )
 
 
 class CollocationScheduler:
@@ -158,7 +177,11 @@ class CollocationScheduler:
         return True, ""
 
     def smallest_admissible(self, job: JobSpec) -> Optional[str]:
-        for prof in _PROFILE_ORDER:
+        start = 0
+        if job.min_profile is not None:
+            # straggler-repack floor: never place below this profile again
+            start = _PROFILE_ORDER.index(job.min_profile)
+        for prof in _PROFILE_ORDER[start:]:
             ok, _ = self.admissible(job, prof)
             if ok:
                 return prof
@@ -172,6 +195,7 @@ class CollocationScheduler:
         *,
         blocked_units: frozenset = frozenset(),
         mode: Optional[CollocationMode] = None,
+        existing: Sequence[Placement] = (),
     ) -> Schedule:
         """Place ``jobs`` under ``mode`` (defaults to the scheduler's own).
 
@@ -179,8 +203,12 @@ class CollocationScheduler:
         smallest admissible profile at the lowest free placement offset;
         upgrade to a larger profile only if the small ones are exhausted.
         ``blocked_units`` are unavailable slice units (failed hardware or
-        surviving neighbours during an elastic repack). NAIVE/MPS share the
-        full device instead — see ``_schedule_shared``."""
+        surviving neighbours during an elastic repack). ``existing`` are
+        placements already live on the device (the cluster's incremental
+        admission path): their units are occupied AND they participate in
+        layout validation, so profile exclusions and the compute-slice
+        budget hold across the union, not just the new jobs. NAIVE/MPS
+        share the full device instead — see ``_schedule_shared``."""
         mode = CollocationMode(mode if mode is not None else self.mode)
         if mode != CollocationMode.MIG:
             return self._schedule_shared(jobs, mode)
@@ -189,6 +217,15 @@ class CollocationScheduler:
         free = [True] * N_UNITS
         for u in blocked_units:
             free[u] = False
+        existing = list(existing)
+        for pl in existing:
+            span = (
+                range(0, N_UNITS)
+                if pl.profile == "7g.40gb"
+                else range(pl.start, pl.start + PROFILES[pl.profile].mem_units)
+            )
+            for u in span:
+                free[u] = False
         assignments: List[Assignment] = []
         rejections: List[Rejection] = []
 
@@ -200,7 +237,8 @@ class CollocationScheduler:
                     span = range(0, N_UNITS)  # full-device profile owns all
                 if all(free[u] for u in span):
                     ok, _ = validate_layout(
-                        [Placement(a.profile, a.placement.start) for a in assignments]
+                        existing
+                        + [Placement(a.profile, a.placement.start) for a in assignments]
                         + [Placement(profile, s)],
                         partitioned=self.partitioned,
                     )
@@ -319,14 +357,7 @@ class CollocationScheduler:
         recommendation order applies: MPS > MIG > naive.
         """
         schedules = {m: self.schedule(jobs, mode=m) for m in CollocationMode}
-        best = max(
-            schedules,
-            key=lambda m: (
-                len(schedules[m].assignments),
-                schedules[m].throughput(),
-                -_MODE_PREFERENCE.index(m),
-            ),
-        )
+        best = rank_modes(schedules)
         # the trial schedules above each overwrote _predicted; straggler
         # detection must compare against the mode actually deployed
         for a in schedules[best].assignments:
@@ -341,6 +372,11 @@ class CollocationScheduler:
             step_s if prev is None else (1 - self.ema_alpha) * prev + self.ema_alpha * step_s
         )
 
+    def reset_observation(self, job_name: str) -> None:
+        """Forget a job's step-time EMA — called when the job is re-placed
+        on a different profile, where the old observations no longer apply."""
+        self._ema.pop(job_name, None)
+
     def stragglers(self) -> List[str]:
         out = []
         for name, ema in self._ema.items():
@@ -352,8 +388,9 @@ class CollocationScheduler:
     def repack_plan(self, schedule: Schedule) -> Dict[str, str]:
         """job -> larger-profile suggestion for flagged stragglers."""
         plan = {}
+        straggling = set(self.stragglers())
         for a in schedule.assignments:
-            if a.job.name not in self.stragglers():
+            if a.job.name not in straggling:
                 continue
             bigger = _PROFILE_ORDER[
                 min(_PROFILE_ORDER.index(a.profile) + 1, len(_PROFILE_ORDER) - 1)

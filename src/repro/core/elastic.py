@@ -25,6 +25,41 @@ from typing import Dict, List, Sequence, Set, Tuple
 from repro.core.collocation import Assignment, CollocationScheduler, Schedule
 from repro.core.instance import JobSpec
 from repro.core.profiles import N_UNITS, Placement
+from repro.core.sharing import CollocationMode
+
+# priority bump applied to killed jobs so they reclaim capacity first when
+# they re-enter the queue (shared with the cluster's failure/migration path)
+REQUEUE_PRIORITY_BUMP = 10
+
+
+def span_units(pl: Placement) -> Set[int]:
+    """Slice units an instance placement occupies (7g owns the full device)."""
+    if pl.profile == "7g.40gb":
+        return set(range(N_UNITS))
+    s0, s1 = pl.span
+    return set(range(s0, s1))
+
+
+def split_by_failure(
+    assignments: Sequence[Assignment], failed: Set[int]
+) -> Tuple[List[JobSpec], List[Assignment]]:
+    """Partition assignments into (killed job specs, surviving assignments).
+
+    Killed jobs come back with their priority bumped — the elastic-repack
+    re-queue semantics both ``ElasticController.repack`` and the cluster's
+    FAILURE event handler apply. Survivors are returned untouched (F3: their
+    instances never intersected the failed units, so they keep running).
+    """
+    killed: List[JobSpec] = []
+    survivors: List[Assignment] = []
+    for a in assignments:
+        if span_units(a.placement) & failed:
+            killed.append(
+                dataclasses.replace(a.job, priority=a.job.priority + REQUEUE_PRIORITY_BUMP)
+            )
+        else:
+            survivors.append(a)
+    return killed, survivors
 
 
 @dataclasses.dataclass
@@ -50,31 +85,42 @@ class ElasticController:
         self.failed.difference_update(units)
 
     def _span_units(self, pl: Placement) -> Set[int]:
-        if pl.profile == "7g.40gb":
-            return set(range(N_UNITS))
-        s0, s1 = pl.span
-        return set(range(s0, s1))
+        return span_units(pl)
 
     def repack(self, schedule: Schedule) -> RepackEvent:
-        """Kill intersecting instances, re-pack their jobs onto survivors."""
-        killed: List[JobSpec] = []
-        survivors: List[Assignment] = []
-        for a in schedule.assignments:
-            if self._span_units(a.placement) & self.failed:
-                killed.append(
-                    dataclasses.replace(a.job, priority=a.job.priority + 10)
-                )
-            else:
-                survivors.append(a)
+        """Kill intersecting instances, re-pack their jobs onto survivors.
+
+        Shared modes (naive/MPS) have no isolation to fall back on: every
+        job spans the whole device, so any unit failure kills the entire
+        job set and nothing can be re-placed on the degraded device — the
+        contrapositive of the paper's F3 isolation finding. The cluster's
+        admission queue (not this controller) re-homes those jobs.
+        """
+        if schedule.mode != CollocationMode.MIG:
+            # (re-queueing with the priority bump is the caller's job — the
+            # cluster's FAILURE handler does it; this event only reports)
+            return RepackEvent(
+                failed_units=tuple(sorted(self.failed)),
+                killed_jobs=tuple(a.job.name for a in schedule.assignments),
+                survivors=(),
+                new_schedule=Schedule([], [], mode=schedule.mode),
+                resumed_from_checkpoint=(),
+            )
+
+        killed, survivors = split_by_failure(schedule.assignments, self.failed)
 
         # re-pack ONLY the killed jobs into the remaining free units: the
         # scheduler sees survivors' units + failed units as occupied.
         occupied = set(self.failed)
         for a in survivors:
-            occupied |= self._span_units(a.placement)
-        partial = self.scheduler.schedule(killed, blocked_units=frozenset(occupied))
+            occupied |= span_units(a.placement)
+        partial = self.scheduler.schedule(
+            killed, blocked_units=frozenset(occupied), mode=CollocationMode.MIG
+        )
 
-        new = Schedule(survivors + partial.assignments, partial.rejections)
+        new = Schedule(
+            survivors + partial.assignments, partial.rejections, mode=schedule.mode
+        )
         return RepackEvent(
             failed_units=tuple(sorted(self.failed)),
             killed_jobs=tuple(j.name for j in killed),

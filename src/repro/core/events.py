@@ -1,0 +1,76 @@
+"""Discrete-event machinery for the cluster simulator.
+
+The cluster (core/cluster.py) is a state machine driven by a time-ordered
+event heap. Everything that changes cluster state is an event:
+
+  ARRIVAL        a job enters the admission queue (``Cluster.submit``);
+  COMPLETION     a placed job finishes its remaining steps — scheduled from
+                 the job's predicted step time, re-scheduled whenever the
+                 device's contention changes, invalidated by a token bump;
+  RECONFIG_DONE  a device finishes a mode migration (MIG re-partitioning /
+                 MPS daemon restart) and rejoins the fleet;
+  FAILURE        slice units on a device go unhealthy (elastic repack);
+  REPAIR         failed units return to health (elastic scale-up).
+
+Determinism contract: events at equal times are processed in push order
+(``seq`` breaks ties), so a run is a pure function of the submitted trace —
+the property tests/test_cluster.py pins down to byte-identical artifacts.
+
+Completion events are *lazy-invalidated*: rather than surgically removing a
+stale event from the heap (O(n)), every job carries a generation token and
+a completion event stores the token it was scheduled under; a popped event
+whose token no longer matches the job's is dropped. This is the standard
+discrete-event idiom for processor-sharing queues, where every arrival and
+departure on a shared device re-times every neighbour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+from typing import Any, List, Optional, Tuple
+
+
+class EventKind(str, enum.Enum):
+    ARRIVAL = "arrival"
+    COMPLETION = "completion"
+    RECONFIG_DONE = "reconfig_done"
+    FAILURE = "failure"
+    REPAIR = "repair"
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time_s: float
+    seq: int  # tie-break: equal-time events fire in push order
+    kind: EventKind
+    payload: Tuple[Any, ...] = ()
+
+    def sort_key(self) -> Tuple[float, int]:
+        return (self.time_s, self.seq)
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, push sequence)."""
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq = 0
+
+    def push(self, time_s: float, kind: EventKind, payload: Tuple[Any, ...] = ()) -> Event:
+        ev = Event(float(time_s), self._seq, EventKind(kind), tuple(payload))
+        heapq.heappush(self._heap, (ev.time_s, ev.seq, ev))
+        self._seq += 1
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[2]
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

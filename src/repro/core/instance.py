@@ -21,16 +21,17 @@ the bound is memory/collective), and 3g.20gb at 3/4.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
-
-import jax
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 from repro.configs.base import ShapeSuite
-from repro.core.partitioner import InstanceMesh
 from repro.core.profiles import PROFILES
 from repro.telemetry import constants as C
 from repro.telemetry import roofline as rl
 from repro.telemetry.hlo import collective_summary, hlo_flops_bytes
+
+if TYPE_CHECKING:  # jax/mesh machinery only needed by InstanceRuntime —
+    # kept import-lazy so the scheduler/cluster stack stays jax-free
+    from repro.core.partitioner import InstanceMesh
 
 
 def compute_discount(profile: str, *, partitioned: bool = True) -> float:
@@ -50,6 +51,9 @@ class JobSpec:
     steps: int = 100
     grad_accum: int = 1
     priority: int = 0  # higher preempts lower on elastic repack
+    # floor on the MIG profile the scheduler may pick — set by the straggler
+    # repack path so a re-queued straggler lands on a larger slice
+    min_profile: Optional[str] = None
 
 
 @dataclasses.dataclass

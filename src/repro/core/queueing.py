@@ -1,0 +1,77 @@
+"""Priority + backfill admission queue for the cluster.
+
+Replaces the one-shot scheduler's "reject forever" behaviour: a job that
+cannot be placed *now* waits here and is retried on every capacity-changing
+event (completion, repair, reconfiguration). Ordering is strict priority
+first, then FIFO within a priority class (arrival time, then submission
+sequence — the deterministic tie-break the simulator's reproducibility
+contract relies on).
+
+Backfill semantics live in the dispatcher (core/cluster.py): the queue is
+scanned *in order* and any entry that fits somewhere starts immediately,
+even if an earlier (higher-priority) entry is head-of-line blocked waiting
+for a big slot. That is classic EASY-style backfill without reservations —
+acceptable here because placed jobs never shrink a blocked job's future
+options below what the empty device offers, and the paper's queueing-delay
+comparison only needs work-conserving admission, not starvation-freedom
+guarantees. ``hol_blocked_events`` counts how often backfill overtook a
+blocked head — a cheap observability hook for the rigidity analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class QueueEntry:
+    key: str  # job name — unique within a cluster
+    item: Any  # opaque to the queue (the cluster stores its ClusterJob)
+    priority: int
+    enqueued_s: float
+    seq: int
+
+    def sort_key(self):
+        return (-self.priority, self.enqueued_s, self.seq)
+
+
+class AdmissionQueue:
+    """Priority queue with stable FIFO order inside each priority class."""
+
+    def __init__(self) -> None:
+        self._entries: Dict[str, QueueEntry] = {}
+        self._seq = 0
+        self.hol_blocked_events = 0
+
+    def push(self, key: str, item: Any, *, priority: int, enqueued_s: float) -> QueueEntry:
+        if key in self._entries:
+            raise KeyError(f"{key!r} already queued")
+        e = QueueEntry(key, item, int(priority), float(enqueued_s), self._seq)
+        self._seq += 1
+        self._entries[key] = e
+        return e
+
+    def remove(self, key: str) -> QueueEntry:
+        return self._entries.pop(key)
+
+    def get(self, key: str) -> Optional[QueueEntry]:
+        return self._entries.get(key)
+
+    def ordered(self) -> List[QueueEntry]:
+        """Entries in dispatch order: priority desc, then FIFO."""
+        return sorted(self._entries.values(), key=QueueEntry.sort_key)
+
+    def keys(self) -> List[str]:
+        return [e.key for e in self.ordered()]
+
+    def note_backfill_overtake(self) -> None:
+        self.hol_blocked_events += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return bool(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries

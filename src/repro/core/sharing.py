@@ -273,6 +273,19 @@ def shared_mode_report(
     raise ValueError(f"{mode} is not a shared mode — use the MIG scheduler path")
 
 
+def device_busy_fraction(jobs: Sequence[SoloProfile]) -> float:
+    """GRACT analogue for a shared (non-partitioned) device: the busiest
+    engine's aggregate activity demand across the collocated jobs, clamped
+    to 1. Sub-saturating mixes score < 1 — the idle fraction the paper
+    measures as GRACT < 1 and the cluster simulator integrates into its
+    per-device utilization metric (core/cluster.py)."""
+    if not jobs:
+        return 0.0
+    return min(
+        1.0, max(sum(j.activity(r) for j in jobs) for r in _RESOURCES)
+    )
+
+
 def sequential_time_s(jobs: Sequence[SoloProfile]) -> float:
     """Baseline the paper compares every mode against: run the jobs one
     after another, each alone on the full device."""

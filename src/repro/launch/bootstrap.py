@@ -1,0 +1,22 @@
+"""Process bootstrap shared by the launch entry points.
+
+The collocation drivers emulate a 256-chip pod on CPU via XLA's host
+platform. The flag must be set *before* jax initializes its backends, so
+entry points call :func:`ensure_host_platform_devices` at the top of the
+module — after the docstring (a bare statement above the docstring makes
+``__doc__`` silently ``None``) and before any ``import jax``.
+"""
+from __future__ import annotations
+
+import os
+
+POD_DEVICE_COUNT = 256  # one 16x16 v5e pod; 2 rows (32 chips) per slice unit
+
+
+def ensure_host_platform_devices(n: int = POD_DEVICE_COUNT) -> None:
+    """Idempotently request ``n`` XLA host-platform devices via XLA_FLAGS."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()

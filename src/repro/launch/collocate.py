@@ -1,10 +1,3 @@
-import os
-
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=256"
-    ).strip()
-
 """Collocation characterization driver — the paper's §3.4 experiment matrix.
 
 For every (workload x device-group) cell of the paper's grid this lowers and
@@ -27,6 +20,10 @@ Usage:
   python -m repro.launch.collocate [--workloads resnet_small,...]
                                    [--suite paper_train] [--out artifacts/collocation]
 """
+from repro.launch.bootstrap import ensure_host_platform_devices
+
+ensure_host_platform_devices()  # must precede the first jax import
+
 import argparse
 import dataclasses
 import json

@@ -1,0 +1,397 @@
+"""Trace-driven cluster simulation driver — the paper's dynamic half.
+
+Where launch/collocate.py reproduces the paper's *static* §3.4 grid (one
+batch of jobs, one device), this driver exercises the event-driven cluster
+(core/cluster.py): a fleet of devices, each with its own collocation mode,
+fed by a seeded synthetic arrival trace over the existing workload registry.
+Every (scenario x fleet-policy) cell runs the *same* trace, so the printed
+differences are pure policy effects:
+
+  scenarios
+    aligned_static   partition-aligned jobs, all at t=0 — the mix MIG is
+                     built for (each job exactly fills a 1g.5gb slice and
+                     its replicated working set makes shared modes admit
+                     only ~half the set at once);
+    mixed_dynamic    Poisson arrivals over tiny/medium/large jobs — the
+                     "more dynamic mixed workloads" for which the paper
+                     calls MIG's rigid partitioning sub-optimal; rigidity
+                     shows up as queueing delay, not prose;
+    drift            the composition drifts mid-trace (partition-aligned
+                     burst, then a flood of tiny jobs) — exercises live
+                     mode migration under the ``best`` policy, including
+                     its checkpoint-rollback + reconfiguration charge.
+
+  policies
+    all-mig / all-mps / all-naive   homogeneous static fleets;
+    best                            best-mode-per-device with live
+                                    reconfiguration (adaptive policy).
+
+The characterization DB is synthesized analytically from per-arch roofline
+terms (busy seconds, replicated + sharded working-set fractions) over the
+real MIG profile algebra (core/profiles.py, F6 compute discounts included),
+so the simulation runs in milliseconds with no compilation; ``--db`` swaps
+in records measured by launch/collocate.py instead.
+
+Determinism contract: ``--seed`` fixes the trace and the cluster event loop
+is reproducible, so the same seed yields a byte-identical
+``artifacts/cluster/_summary.json`` (asserted by tests/test_cluster.py and
+the CI smoke step).
+
+Usage:
+  python -m repro.launch.simulate [--steps 60] [--seed 0] [--devices 4]
+                                  [--out artifacts/cluster]
+                                  [--scenarios ...] [--policies ...]
+"""
+from repro.launch.bootstrap import ensure_host_platform_devices
+
+ensure_host_platform_devices()  # parity with collocate.py for --db reruns
+
+import argparse
+import json
+import random
+import traceback
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ShapeSuite
+from repro.configs.registry import CONFIGS
+from repro.core.cluster import Cluster
+from repro.core.instance import JobSpec, compute_discount
+from repro.core.profiles import N_UNITS, PROFILES
+from repro.core.sharing import STEP_LATENCY_S, CollocationMode
+from repro.telemetry.constants import HBM_PER_CHIP
+
+# One shape suite for the whole simulation: batch 32 (the paper's §3.4
+# setting), 3200 samples/epoch -> 100 steps per epoch.
+SIM_SUITE = ShapeSuite("sim", 1024, 32, "train")
+SIM_SAMPLES_PER_EPOCH = 3200
+
+# Analytic workload catalog over registry archs. Terms are full-device
+# solo values: ``busy_s`` the dominant roofline term per step, ``repl``
+# the per-chip working-set fraction that is replicated (params, per-chip
+# activations — does not shrink with more chips), ``shard`` the fraction
+# that shards away with chip count. Classes:
+#   tiny     latency-dominated (GRACT << 1) — collocation's best case;
+#   aligned  tiny compute but a slice-sized working set: exactly fills a
+#            1g.5gb, so 7 of them tile a MIG device while shared modes can
+#            only admit ~4 before aggregate HBM runs out;
+#   medium   fits nothing below 3g.20gb;
+#   large    full-device only (7g.40gb), saturating.
+SIM_WORKLOADS: Dict[str, Dict] = {
+    "resnet_small": {"cls": "tiny", "busy_s": 1.0e-4, "repl": 0.05, "shard": 0.005},
+    "whisper-base": {"cls": "tiny", "busy_s": 1.5e-4, "repl": 0.06, "shard": 0.005},
+    "granite-3-2b": {"cls": "aligned", "busy_s": 1.0e-4, "repl": 0.20, "shard": 0.005},
+    "resnet_medium": {"cls": "medium", "busy_s": 4.0e-3, "repl": 0.22, "shard": 0.22},
+    "llama3-8b": {"cls": "medium", "busy_s": 5.0e-3, "repl": 0.24, "shard": 0.20},
+    "resnet_large": {"cls": "large", "busy_s": 2.0e-2, "repl": 0.35, "shard": 0.35},
+}
+
+_MIX = (  # mixed_dynamic draw weights
+    ("resnet_small", 0.35),
+    ("whisper-base", 0.20),
+    ("resnet_medium", 0.20),
+    ("llama3-8b", 0.10),
+    ("resnet_large", 0.15),
+)
+
+SCENARIOS = ("aligned_static", "mixed_dynamic", "drift")
+POLICIES = ("all-mig", "all-mps", "all-naive", "best")
+
+
+def synthetic_char_db(
+    workloads: Optional[Dict[str, Dict]] = None, suite: ShapeSuite = SIM_SUITE
+) -> Dict[Tuple[str, str, str], dict]:
+    """Characterization records per (arch, suite, profile), analytically.
+
+    Mirrors what launch/collocate.py measures: per-profile step time from
+    the roofline terms with the F6 compute discount, and per-chip peak
+    memory from the replicated + sharded working-set split. All archs must
+    exist in the workload registry — the trace generator draws real keys.
+    """
+    workloads = workloads if workloads is not None else SIM_WORKLOADS
+    db: Dict[Tuple[str, str, str], dict] = {}
+    for arch, w in workloads.items():
+        if arch not in CONFIGS:
+            raise KeyError(f"{arch!r} is not a registry arch")
+        for prof_name, prof in PROFILES.items():
+            chips_frac = prof.mem_units / N_UNITS  # fraction of pod chips
+            disc = compute_discount(prof_name)
+            compute_s = w["busy_s"] / chips_frac / disc
+            memory_s = 0.3 * compute_s
+            collective_s = 0.1 * compute_s
+            peak_frac = w["repl"] + w["shard"] / chips_frac
+            db[(arch, suite.name, prof_name)] = {
+                "fits": peak_frac <= 1.0,
+                "step_s": compute_s + STEP_LATENCY_S,
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "peak_bytes_per_device": peak_frac * HBM_PER_CHIP,
+            }
+    return db
+
+
+def load_char_db(artifact_dir: Path) -> Dict[Tuple[str, str, str], dict]:
+    """Build the char DB from measured launch/collocate.py artifacts."""
+    db: Dict[Tuple[str, str, str], dict] = {}
+    for f in sorted(Path(artifact_dir).glob("*.json")):
+        if f.name.startswith("_"):
+            continue
+        cell = json.loads(f.read_text())
+        if cell.get("mode") not in ("mig", "solo"):
+            continue
+        for rec in cell.get("records", []):
+            db[(rec["arch"], rec["shape"], rec["profile"])] = rec
+    if not db:
+        raise FileNotFoundError(f"no characterization records under {artifact_dir}")
+    return db
+
+
+# -- trace generation --------------------------------------------------------------
+
+TraceItem = Tuple[float, JobSpec, int]  # (arrival_s, spec, epochs)
+
+
+def _pick_arch(rng: random.Random) -> str:
+    x = rng.random()
+    acc = 0.0
+    for arch, w in _MIX:
+        acc += w
+        if x < acc:
+            return arch
+    return _MIX[-1][0]
+
+
+def aligned_static_trace(rng: random.Random, n_jobs: int, n_devices: int) -> List[TraceItem]:
+    """Partition-aligned batch: slice-sized jobs, all submitted at t=0."""
+    n = min(n_jobs, 7 * n_devices)
+    return [
+        (0.0, JobSpec(f"al{i}", "granite-3-2b", SIM_SUITE), 3) for i in range(n)
+    ]
+
+
+def mixed_dynamic_trace(
+    rng: random.Random, n_jobs: int, *, mean_interarrival_s: float = 0.2
+) -> List[TraceItem]:
+    """Poisson arrivals over the tiny/medium/large mix."""
+    trace: List[TraceItem] = []
+    t = 0.0
+    for i in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival_s)
+        arch = _pick_arch(rng)
+        prio = 2 if rng.random() < 0.10 else 0
+        epochs = rng.randint(1, 3)
+        trace.append((t, JobSpec(f"dy{i}", arch, SIM_SUITE, priority=prio), epochs))
+    return trace
+
+
+def drift_trace(rng: random.Random, n_jobs: int, n_devices: int) -> List[TraceItem]:
+    """Composition drift: a partition-aligned burst, then a tiny-job flood
+    — the queue mix the adaptive policy answers with a live mode migration."""
+    trace: List[TraceItem] = []
+    n_aligned = min(7 * n_devices, max(1, n_jobs // 2))
+    for i in range(n_aligned):
+        trace.append(
+            (0.01 * i, JobSpec(f"ph1-{i}", "granite-3-2b", SIM_SUITE), 2)
+        )
+    t = 4.0
+    for i in range(max(0, n_jobs - n_aligned)):
+        t += rng.expovariate(1.0 / 0.005)  # near-burst: > 7 per device in flight
+        arch = "resnet_small" if rng.random() < 0.7 else "whisper-base"
+        trace.append((t, JobSpec(f"ph2-{i}", arch, SIM_SUITE), rng.randint(1, 2)))
+    return trace
+
+
+def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[TraceItem]:
+    # fresh, scenario-salted RNG: identical trace for every policy
+    rng = random.Random(f"{seed}:{scenario}")
+    if scenario == "aligned_static":
+        return aligned_static_trace(rng, n_jobs, n_devices)
+    if scenario == "mixed_dynamic":
+        return mixed_dynamic_trace(rng, n_jobs)
+    if scenario == "drift":
+        return drift_trace(rng, n_jobs, n_devices)
+    raise KeyError(f"unknown scenario {scenario!r}; available: {SCENARIOS}")
+
+
+def make_fleet(policy: str, n_devices: int) -> Tuple[List[Tuple[str, CollocationMode]], str]:
+    """(device list, cluster policy) for a fleet-mode policy."""
+    modes = {
+        "all-mig": CollocationMode.MIG,
+        "all-mps": CollocationMode.MPS,
+        "all-naive": CollocationMode.NAIVE,
+    }
+    if policy in modes:
+        return [(f"d{i}", modes[policy]) for i in range(n_devices)], "static"
+    if policy == "best":
+        # start from the paper's single-user recommendation (MPS) and let
+        # per-device best_mode re-partition live as the mix drifts
+        return [(f"d{i}", CollocationMode.MPS) for i in range(n_devices)], "adaptive"
+    raise KeyError(f"unknown policy {policy!r}; available: {POLICIES}")
+
+
+# -- cell execution ----------------------------------------------------------------
+
+
+def run_cell(
+    scenario: str,
+    policy: str,
+    *,
+    seed: int = 0,
+    n_jobs: int = 60,
+    n_devices: int = 4,
+    reconfig_cost_s: float = 0.5,
+    char_db: Optional[Dict] = None,
+) -> Dict:
+    """One (scenario x policy) simulation; returns the artifact cell dict."""
+    db = char_db if char_db is not None else synthetic_char_db()
+    devices, cluster_policy = make_fleet(policy, n_devices)
+    cluster = Cluster(
+        db,
+        devices,
+        policy=cluster_policy,
+        reconfig_cost_s=reconfig_cost_s,
+        migration_cooldown_s=1.0,
+    )
+    trace = make_trace(scenario, seed, n_jobs, n_devices)
+    for arrival_s, spec, epochs in trace:
+        cluster.submit(
+            spec, arrival_s, epochs=epochs, samples_per_epoch=SIM_SAMPLES_PER_EPOCH
+        )
+    report = cluster.run()
+    return {
+        "scenario": scenario,
+        "policy": policy,
+        "seed": seed,
+        "n_jobs": len(trace),
+        "n_devices": n_devices,
+        "reconfig_cost_s": reconfig_cost_s,
+        "status": "OK",
+        "report": report.to_dict(),
+    }
+
+
+def summarize_cell(cell: Dict) -> Dict:
+    r = cell["report"]
+    return {
+        "scenario": cell["scenario"],
+        "policy": cell["policy"],
+        "n_jobs": cell["n_jobs"],
+        "makespan_s": r["makespan_s"],
+        "mean_jct_s": r["mean_jct_s"],
+        "mean_queueing_delay_s": r["mean_queueing_delay_s"],
+        "max_queueing_delay_s": r["max_queueing_delay_s"],
+        "utilization_mean": r["utilization"]["mean"],
+        "completed": r["completed"],
+        "rejected": r["rejected"],
+        "still_queued": r["still_queued"],
+        "migrations": r["migrations"],
+        "reconfig_cost_s": r["reconfig_cost_s"],
+        "lost_steps": r["lost_steps"],
+    }
+
+
+def run_all(
+    *,
+    seed: int = 0,
+    n_jobs: int = 60,
+    n_devices: int = 4,
+    reconfig_cost_s: float = 0.5,
+    scenarios: Sequence[str] = SCENARIOS,
+    policies: Sequence[str] = POLICIES,
+    char_db: Optional[Dict] = None,
+) -> List[Dict]:
+    db = char_db if char_db is not None else synthetic_char_db()
+    return [
+        run_cell(
+            sc,
+            po,
+            seed=seed,
+            n_jobs=n_jobs,
+            n_devices=n_devices,
+            reconfig_cost_s=reconfig_cost_s,
+            char_db=db,
+        )
+        for sc in scenarios
+        for po in policies
+    ]
+
+
+def _rounded(obj, ndigits: int = 9):
+    """Recursively round floats so artifacts are byte-stable."""
+    if isinstance(obj, float):
+        return round(obj, ndigits)
+    if isinstance(obj, dict):
+        return {k: _rounded(v, ndigits) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_rounded(v, ndigits) for v in obj]
+    return obj
+
+
+def _dump(path: Path, obj) -> None:
+    path.write_text(json.dumps(_rounded(obj), indent=2, sort_keys=True) + "\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__ and __doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=60,
+                    help="number of jobs in each generated arrival trace")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--out", default="artifacts/cluster")
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS))
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--reconfig-cost", type=float, default=0.5,
+                    help="device downtime charged per mode migration (s)")
+    ap.add_argument("--db", default=None,
+                    help="load the char DB from collocate.py artifacts "
+                         "instead of the synthetic catalog")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    char_db = load_char_db(Path(args.db)) if args.db else synthetic_char_db()
+
+    summaries: List[Dict] = []
+    failures = 0
+    for scenario in args.scenarios.split(","):
+        for policy in args.policies.split(","):
+            try:
+                cell = run_cell(
+                    scenario,
+                    policy,
+                    seed=args.seed,
+                    n_jobs=args.steps,
+                    n_devices=args.devices,
+                    reconfig_cost_s=args.reconfig_cost,
+                    char_db=char_db,
+                )
+                _dump(out_dir / f"{scenario}__{policy}.json", cell)
+                s = summarize_cell(cell)
+                summaries.append(s)
+                print(
+                    f"[OK]   {scenario:<16} {policy:<10} jobs={s['n_jobs']:>3} "
+                    f"makespan={s['makespan_s']:.2f}s jct={s['mean_jct_s']:.2f}s "
+                    f"qdelay={s['mean_queueing_delay_s']:.3f}s "
+                    f"util={s['utilization_mean']:.2f} migr={s['migrations']}",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"[FAIL] {scenario} {policy}: {e}", flush=True)
+                traceback.print_exc(limit=3)
+    _dump(
+        out_dir / "_summary.json",
+        {
+            "seed": args.seed,
+            "steps": args.steps,
+            "devices": args.devices,
+            "cells": summaries,
+            "failures": failures,
+        },
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,339 @@
+"""Event-driven cluster: arrivals, queueing, contention re-timing, backfill,
+mode migration, failures, stragglers, and byte-level determinism."""
+import json
+
+import pytest
+
+from repro.configs.base import ShapeSuite
+from repro.core.cluster import Cluster
+from repro.core.collocation import _PROFILE_ORDER
+from repro.core.events import EventKind, EventQueue
+from repro.core.instance import JobSpec, compute_discount
+from repro.core.queueing import AdmissionQueue
+from repro.core.sharing import CollocationMode, shared_mode_report
+from repro.telemetry.constants import HBM_PER_CHIP
+
+SUITE = ShapeSuite("t", 1024, 32, "train")
+# 320 samples / batch 32 -> 10 steps per epoch
+SAMPLES = 320
+
+
+def make_db(arch, *, step_s=0.01, peak_frac=0.1, fits_by_prof=None,
+            compute_s=None):
+    fits_by_prof = fits_by_prof or {}
+    db = {}
+    for prof in _PROFILE_ORDER:
+        db[(arch, SUITE.name, prof)] = {
+            "fits": fits_by_prof.get(prof, True),
+            "step_s": step_s,
+            "compute_s": step_s if compute_s is None else compute_s,
+            "memory_s": 0.0,
+            "collective_s": 0.0,
+            "peak_bytes_per_device": peak_frac * HBM_PER_CHIP,
+        }
+    return db
+
+
+# -- plumbing --------------------------------------------------------------------
+
+
+def test_event_queue_orders_by_time_then_push_order():
+    q = EventQueue()
+    q.push(2.0, EventKind.ARRIVAL, ("b",))
+    q.push(1.0, EventKind.ARRIVAL, ("a",))
+    q.push(1.0, EventKind.COMPLETION, ("c",))
+    order = [q.pop().payload[0] for _ in range(3)]
+    assert order == ["a", "c", "b"]  # equal times keep push order
+
+
+def test_admission_queue_priority_then_fifo():
+    q = AdmissionQueue()
+    q.push("low", None, priority=0, enqueued_s=0.0)
+    q.push("high", None, priority=5, enqueued_s=1.0)
+    q.push("low2", None, priority=0, enqueued_s=0.5)
+    assert q.keys() == ["high", "low", "low2"]
+    q.remove("low")
+    assert q.keys() == ["high", "low2"]
+    with pytest.raises(KeyError):
+        q.push("high", None, priority=1, enqueued_s=2.0)
+
+
+# -- arrivals, queueing, completion ------------------------------------------------
+
+
+def test_fifo_queueing_and_exact_completion_times():
+    """Two full-device jobs on one MIG device: the second waits for the
+    first — queueing delay replaces the one-shot 'reject forever'."""
+    db = make_db("big", step_s=0.01,
+                 fits_by_prof={p: p == "7g.40gb" for p in _PROFILE_ORDER})
+    c = Cluster(db, [("d0", CollocationMode.MIG)])
+    c.submit(JobSpec("a", "big", SUITE), 0.0, epochs=1, samples_per_epoch=SAMPLES)
+    c.submit(JobSpec("b", "big", SUITE), 0.05, epochs=1, samples_per_epoch=SAMPLES)
+    rep = c.run()
+    ja = next(j for j in rep.jobs if j["name"] == "a")
+    jb = next(j for j in rep.jobs if j["name"] == "b")
+    assert ja["finished_s"] == pytest.approx(0.1)  # 10 steps x 0.01
+    assert jb["started_s"] == pytest.approx(0.1)   # waited for a's slot
+    assert jb["queueing_delay_s"] == pytest.approx(0.05)
+    assert jb["finished_s"] == pytest.approx(0.2)
+    assert rep.completed == 2 and rep.rejected == 0 and rep.still_queued == 0
+
+
+def test_queueing_delay_is_positive_when_device_busy():
+    db = make_db("big", step_s=0.02,
+                 fits_by_prof={p: p == "7g.40gb" for p in _PROFILE_ORDER})
+    c = Cluster(db, [("d0", CollocationMode.MIG)])
+    c.submit(JobSpec("a", "big", SUITE), 0.0, epochs=1, samples_per_epoch=SAMPLES)
+    c.submit(JobSpec("b", "big", SUITE), 0.05, epochs=1, samples_per_epoch=SAMPLES)
+    rep = c.run()
+    jb = next(j for j in rep.jobs if j["name"] == "b")
+    assert jb["queueing_delay_s"] == pytest.approx(0.2 - 0.05)
+    assert jb["finished_s"] == pytest.approx(0.4)
+
+
+def test_shared_device_retimes_neighbours_processor_sharing():
+    """MPS: an arrival stretches the incumbent's step (contention), the
+    departure relaxes it — finish times match the processor-sharing math
+    derived from the mode's own contention model."""
+    db = make_db("sat", step_s=0.09, compute_s=0.1, peak_frac=0.3)
+    c = Cluster(db, [("d0", CollocationMode.MPS)])
+    specs = [JobSpec("a", "sat", SUITE), JobSpec("b", "sat", SUITE)]
+    tb = 0.4
+    c.submit(specs[0], 0.0, epochs=1, samples_per_epoch=SAMPLES)
+    c.submit(specs[1], tb, epochs=1, samples_per_epoch=SAMPLES)
+
+    # expected step times from the contention model itself
+    sched = c.devices["d0"].scheduler
+    solo_a = sched.solo_profile(specs[0])
+    solo_b = sched.solo_profile(specs[1])
+    s_solo = shared_mode_report(
+        CollocationMode.MPS, [solo_a]).effective_step_s["a"]
+    s_both = shared_mode_report(
+        CollocationMode.MPS, [solo_a, solo_b]).effective_step_s["a"]
+    assert s_both > s_solo  # saturating pair contends
+
+    steps = 10
+    done_at_tb = tb / s_solo
+    t_a = tb + (steps - done_at_tb) * s_both  # a finishes first (head start)
+    done_b = (t_a - tb) / s_both
+    t_b = t_a + (steps - done_b) * s_solo  # b speeds back up alone
+
+    rep = c.run()
+    ja = next(j for j in rep.jobs if j["name"] == "a")
+    jb = next(j for j in rep.jobs if j["name"] == "b")
+    assert ja["finished_s"] == pytest.approx(t_a, rel=1e-9)
+    assert jb["finished_s"] == pytest.approx(t_b, rel=1e-9)
+
+
+def test_backfill_lets_small_jobs_overtake_blocked_head():
+    db = {}
+    db.update(make_db("big", step_s=0.05,
+                      fits_by_prof={p: p == "7g.40gb" for p in _PROFILE_ORDER}))
+    db.update(make_db("small", step_s=0.01))
+    c = Cluster(db, [("d0", CollocationMode.MIG)])
+    c.submit(JobSpec("s0", "small", SUITE), 0.0, epochs=1, samples_per_epoch=SAMPLES)
+    # high-priority full-device job is head-of-line blocked behind s0 ...
+    c.submit(JobSpec("big", "big", SUITE, priority=5), 0.01,
+             epochs=1, samples_per_epoch=SAMPLES)
+    # ... and a later small job backfills around it
+    c.submit(JobSpec("s1", "small", SUITE), 0.02, epochs=1, samples_per_epoch=SAMPLES)
+    rep = c.run()
+    s1 = next(j for j in rep.jobs if j["name"] == "s1")
+    big = next(j for j in rep.jobs if j["name"] == "big")
+    assert s1["started_s"] == pytest.approx(0.02)  # ran immediately
+    assert big["started_s"] > s1["started_s"]
+    assert rep.hol_blocked_events >= 1
+    assert rep.completed == 3
+
+
+def test_unplaceable_job_rejected_with_reason_others_wait():
+    db = make_db("small")
+    c = Cluster(db, [("d0", CollocationMode.MIG)])
+    c.submit(JobSpec("ok", "small", SUITE), 0.0, epochs=1, samples_per_epoch=SAMPLES)
+    c.submit(JobSpec("ghost", "nochar", SUITE), 0.0, epochs=1, samples_per_epoch=SAMPLES)
+    rep = c.run()
+    assert rep.rejected == 1
+    ghost = next(j for j in rep.jobs if j["name"] == "ghost")
+    assert "unplaceable" in ghost["rejected_reason"]
+    assert rep.completed == 1
+
+
+# -- mode migration ---------------------------------------------------------------
+
+
+def aligned_db(arch="al"):
+    """Slice-sized jobs: fit every profile, but the replicated working set
+    (~0.205 of HBM each) lets a shared device admit only 4 at once while
+    MIG tiles 7 across 1g slices."""
+    return make_db(arch, step_s=0.002, compute_s=0.0001, peak_frac=0.205)
+
+
+def test_adaptive_policy_migrates_and_charges_cost():
+    db = aligned_db()
+    c = Cluster(db, [("d0", CollocationMode.MPS)], policy="adaptive",
+                reconfig_cost_s=0.5)
+    for i in range(7):
+        c.submit(JobSpec(f"al{i}", "al", SUITE), 0.0, epochs=2,
+                 samples_per_epoch=SAMPLES)
+    rep = c.run()
+    assert rep.migrations >= 1
+    assert rep.reconfig_cost_s == pytest.approx(rep.migrations * 0.5)
+    ev = rep.migration_events[0]
+    assert ev["from"] == "mps" and ev["to"] == "mig"
+    assert rep.devices[0]["mode"] == "mig"
+    assert rep.completed == 7 and rep.still_queued == 0
+    # every requeued job counted its migration
+    requeued = sum(len(e["requeued"]) for e in rep.migration_events)
+    assert sum(j["migrations"] for j in rep.jobs) == requeued
+
+
+def test_static_policy_never_migrates():
+    db = aligned_db()
+    c = Cluster(db, [("d0", CollocationMode.MPS)], policy="static")
+    for i in range(7):
+        c.submit(JobSpec(f"al{i}", "al", SUITE), 0.0, epochs=2,
+                 samples_per_epoch=SAMPLES)
+    rep = c.run()
+    assert rep.migrations == 0 and rep.completed == 7
+
+
+def test_migration_rollback_charges_lost_steps():
+    """A migration mid-epoch rolls displaced jobs back to their last
+    checkpoint: the re-done work shows up as lost_steps."""
+    db = aligned_db()
+    c = Cluster(db, [("d0", CollocationMode.MPS)], policy="adaptive",
+                reconfig_cost_s=0.1, migration_cooldown_s=0.0)
+    # 4 jobs fit under MPS; they make mid-epoch progress before the 5th..7th
+    # arrive and tip best_mode to MIG
+    for i in range(4):
+        c.submit(JobSpec(f"al{i}", "al", SUITE), 0.0, epochs=5,
+                 samples_per_epoch=SAMPLES)
+    for i in range(4, 7):
+        c.submit(JobSpec(f"al{i}", "al", SUITE), 0.004, epochs=5,
+                 samples_per_epoch=SAMPLES)
+    rep = c.run()
+    assert rep.migrations >= 1
+    assert rep.lost_steps > 0
+    assert rep.completed == 7
+
+
+# -- failures (elastic repack as an event handler) ---------------------------------
+
+
+def test_mig_failure_kills_intersecting_jobs_only():
+    db = make_db("small", step_s=0.01)
+    c = Cluster(db, [("d0", CollocationMode.MIG)])
+    for i in range(7):
+        c.submit(JobSpec(f"j{i}", "small", SUITE), 0.0, epochs=2,
+                 samples_per_epoch=SAMPLES)
+    c.inject_failure("d0", [0, 1], at_s=0.05)
+    rep = c.run()
+    ev = rep.failure_events[0]
+    assert set(ev["killed"]) == {"j0", "j1"}  # 1g slices at units 0 and 1
+    assert set(ev["survivors"]) == {f"j{i}" for i in range(2, 7)}
+    # killed jobs were re-queued (priority bumped) and finished elsewhere
+    assert rep.completed == 7
+    for name in ("j0", "j1"):
+        row = next(j for j in rep.jobs if j["name"] == name)
+        assert row["priority"] >= 10
+    # survivors untouched: they finished exactly on schedule
+    j6 = next(j for j in rep.jobs if j["name"] == "j6")
+    assert j6["finished_s"] == pytest.approx(0.2)  # 20 steps x 0.01
+
+
+def test_shared_device_failure_kills_everything():
+    db = make_db("small", step_s=0.0001, peak_frac=0.05)
+    c = Cluster(db, [("d0", CollocationMode.MPS)])
+    for i in range(3):
+        c.submit(JobSpec(f"j{i}", "small", SUITE), 0.0, epochs=100,
+                 samples_per_epoch=SAMPLES)
+    c.inject_failure("d0", [3], at_s=0.01)
+    c.inject_repair("d0", [3], at_s=0.05)
+    rep = c.run()
+    ev = rep.failure_events[0]
+    assert set(ev["killed"]) == {"j0", "j1", "j2"}  # no isolation (F3 flip)
+    assert ev["survivors"] == []
+    assert rep.completed == 3  # repair let them finish
+
+
+def test_degraded_mig_device_never_migrates_to_shared_mode():
+    """A MIG device with failed units must not 'upgrade' to a shared mode
+    it cannot actually run (shared placement refuses degraded devices) —
+    regression: that migration stranded every job forever."""
+    db = make_db("small", step_s=0.01)
+    c = Cluster(db, [("d0", CollocationMode.MIG)], policy="adaptive",
+                reconfig_cost_s=0.1)
+    c.inject_failure("d0", [0], at_s=0.0)
+    for i in range(8):  # more jobs than the 6 surviving 1g slots
+        c.submit(JobSpec(f"j{i}", "small", SUITE), 0.01, epochs=1,
+                 samples_per_epoch=SAMPLES)
+    rep = c.run()
+    assert rep.completed == 8 and rep.still_queued == 0
+    assert rep.devices[0]["mode"] == "mig"
+
+
+# -- straggler EMA folded into the loop --------------------------------------------
+
+
+def test_straggler_observation_triggers_live_repack():
+    db = make_db("small", step_s=1.0)
+    c = Cluster(db, [("d0", CollocationMode.MIG)],
+                scheduler_kwargs={"straggler_tol": 1.5, "ema_alpha": 1.0})
+    for i in range(3):
+        c.submit(JobSpec(f"j{i}", "small", SUITE), 0.0, epochs=1,
+                 samples_per_epoch=SAMPLES)
+    c.run_until(0.0)  # place everyone
+    c.observe_step("j1", 2.5, at_s=1.0)  # way past tol x predicted 1.0
+    rep = c.run()
+    assert rep.straggler_repacks >= 1
+    j1 = c.jobs["j1"]
+    assert j1.spec.min_profile == "2g.10gb"  # one profile up from 1g
+    assert j1.straggler_repacks == 1
+    assert rep.completed == 3
+
+
+# -- determinism + the paper's dynamic findings ------------------------------------
+
+
+def test_simulate_same_seed_byte_identical(tmp_path):
+    from repro.launch import simulate
+
+    out1, out2, out3 = tmp_path / "a", tmp_path / "b", tmp_path / "c"
+    args = ["--steps", "24", "--devices", "2",
+            "--scenarios", "mixed_dynamic,drift"]
+    assert simulate.main(args + ["--seed", "7", "--out", str(out1)]) == 0
+    assert simulate.main(args + ["--seed", "7", "--out", str(out2)]) == 0
+    assert simulate.main(args + ["--seed", "8", "--out", str(out3)]) == 0
+    s1 = (out1 / "_summary.json").read_bytes()
+    s2 = (out2 / "_summary.json").read_bytes()
+    s3 = (out3 / "_summary.json").read_bytes()
+    assert s1 == s2  # same seed => byte-identical
+    for f in out1.glob("*.json"):
+        assert f.read_bytes() == (out2 / f.name).read_bytes()
+    assert json.loads(s3)["cells"] != json.loads(s1)["cells"]  # seed matters
+    assert json.loads(s1)["failures"] == 0
+
+
+def test_simulate_reproduces_paper_dynamic_findings():
+    """The acceptance criteria, pinned: (a) all-MIG accrues more queueing
+    delay than all-MPS on the mixed dynamic trace; (b) MIG wins the
+    partition-aligned static trace; (c) the best policy migrates and is
+    charged reconfiguration cost."""
+    from repro.launch.simulate import run_all, summarize_cell
+
+    cells = {(c["scenario"], c["policy"]): summarize_cell(c)
+             for c in run_all(seed=0, n_jobs=60, n_devices=4)}
+    mig = cells[("mixed_dynamic", "all-mig")]
+    mps = cells[("mixed_dynamic", "all-mps")]
+    assert mig["mean_queueing_delay_s"] > mps["mean_queueing_delay_s"]
+    amig = cells[("aligned_static", "all-mig")]
+    amps = cells[("aligned_static", "all-mps")]
+    assert amig["makespan_s"] < amps["makespan_s"]
+    assert amig["mean_queueing_delay_s"] <= amps["mean_queueing_delay_s"]
+    best = cells[("drift", "best")]
+    assert best["migrations"] >= 1
+    assert best["reconfig_cost_s"] > 0
+    # every cell drained its queue and completed every job
+    for c in cells.values():
+        assert c["still_queued"] == 0
+        assert c["completed"] + c["rejected"] == c["n_jobs"]

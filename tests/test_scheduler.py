@@ -4,10 +4,16 @@ import dataclasses
 from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ShapeSuite
-from repro.core.collocation import CollocationScheduler, _PROFILE_ORDER
+from repro.core.collocation import (
+    _MODE_PREFERENCE,
+    _PROFILE_ORDER,
+    MODE_PREFERENCE,
+    CollocationScheduler,
+)
 from repro.core.elastic import ElasticController
 from repro.core.instance import JobSpec
-from repro.core.profiles import N_UNITS, PROFILES, validate_layout
+from repro.core.profiles import N_UNITS, PROFILES, Placement, validate_layout
+from repro.core.sharing import CollocationMode
 from repro.telemetry.constants import HBM_PER_CHIP
 
 SUITE = ShapeSuite("t", 1024, 32, "train")
@@ -101,6 +107,64 @@ def test_schedules_are_always_valid_layouts(job_descs):
         assert s.admissible(a.job, a.profile)[0]
 
 
+def test_best_mode_tie_breaks_by_mode_preference():
+    """Exact (jobs placed, throughput) ties fall back to the paper's
+    recommendation order: MPS > MIG > naive."""
+    assert MODE_PREFERENCE == (
+        CollocationMode.MPS, CollocationMode.MIG, CollocationMode.NAIVE
+    )
+    assert _MODE_PREFERENCE is MODE_PREFERENCE  # compat alias
+    # nothing fits anywhere -> all three modes tie at (0 placed, 0 jobs/s)
+    db = full_db("huge", fits_by_prof={p: False for p in _PROFILE_ORDER})
+    s = CollocationScheduler(db)
+    decision = s.best_mode([JobSpec("j", "huge", SUITE)])
+    scores = decision.scores()
+    assert len(set(scores.values())) == 1  # exact three-way tie
+    assert decision.mode == CollocationMode.MPS
+
+
+def test_best_mode_single_job_mps_beats_naive_on_tie():
+    """With one job, MPS and naive degenerate to the same effective step
+    (no neighbours, no switch overhead) — the preference picks MPS."""
+    db = full_db("solo", step_by_prof={p: 8.0 for p in _PROFILE_ORDER})
+    s = CollocationScheduler(db)
+    decision = s.best_mode([JobSpec("j", "solo", SUITE)])
+    scores = decision.scores()
+    assert scores[CollocationMode.MPS] == scores[CollocationMode.NAIVE]
+    # the F6 un-discount makes the shared step < the MIG record's 8.0s,
+    # so the tie is between the shared modes and MPS wins it
+    assert decision.mode == CollocationMode.MPS
+
+
+def test_min_profile_floor_respected():
+    """A straggler re-queued with min_profile lands on the bigger slice
+    even though a smaller one would fit."""
+    db = full_db("small")
+    s = CollocationScheduler(db)
+    job = JobSpec("j", "small", SUITE, min_profile="3g.20gb")
+    assert s.smallest_admissible(job) == "3g.20gb"
+    sched = s.schedule([job])
+    assert sched.assignments[0].profile == "3g.20gb"
+
+
+def test_schedule_existing_placements_validate_jointly():
+    """Incremental admission (the cluster path) must honour the placement
+    tree across live + new instances: 4g + 3g is NVIDIA's documented
+    invalid combination even though the units are free."""
+    db = full_db("mid", fits_by_prof={p: p in ("3g.20gb", "4g.20gb", "7g.40gb")
+                                      for p in _PROFILE_ORDER})
+    db.update(full_db("small"))
+    s = CollocationScheduler(db)
+    live = [Placement("4g.20gb", 0)]
+    blocked = s.schedule([JobSpec("m", "mid", SUITE)], existing=live)
+    assert not blocked.assignments  # 3g would pair with live 4g -> excluded
+    ok = s.schedule([JobSpec("t", "small", SUITE)], existing=live)
+    assert ok.assignments and ok.assignments[0].placement.start >= 4
+    layout = live + [ok.assignments[0].placement]
+    valid, why = validate_layout(layout)
+    assert valid, why
+
+
 def test_straggler_detection_and_repack_plan():
     db = full_db("small", step_by_prof={p: 1.0 for p in _PROFILE_ORDER})
     s = CollocationScheduler(db, straggler_tol=1.5, ema_alpha=1.0)
@@ -112,6 +176,20 @@ def test_straggler_detection_and_repack_plan():
     plan = s.repack_plan(sched)
     assert "j1" in plan and plan["j1"] != sched.assignments[0].profile
     assert "j0" not in plan
+
+
+def test_repack_plan_handles_many_stragglers():
+    """The straggler set is computed once (not per assignment): every
+    flagged job gets its upgrade suggestion in a single pass."""
+    db = full_db("small", step_by_prof={p: 1.0 for p in _PROFILE_ORDER})
+    s = CollocationScheduler(db, straggler_tol=1.5, ema_alpha=1.0)
+    jobs = [JobSpec(f"j{i}", "small", SUITE) for i in range(7)]
+    sched = s.schedule(jobs)
+    for i in range(7):
+        s.observe_step(f"j{i}", 3.0 if i % 2 == 0 else 1.0)
+    plan = s.repack_plan(sched)
+    assert set(plan) == {f"j{i}" for i in range(7) if i % 2 == 0}
+    assert all(PROFILES[p].mem_units > 1 for p in plan.values())
 
 
 def test_elastic_repack_preserves_survivors():
@@ -135,6 +213,48 @@ def test_elastic_repack_preserves_survivors():
         assert not span & {0, 1}, f"{a.job.name} re-placed on failed unit"
     ok, why = validate_layout([a.placement for a in ev.new_schedule.assignments])
     assert ok, why
+
+
+def test_elastic_repack_bumps_priority_and_keeps_survivors_untouched():
+    """Killed jobs re-enter with +10 priority; surviving assignments are
+    the *same objects* (their instances were never touched — F3)."""
+    db = full_db("small")
+    s = CollocationScheduler(db)
+    jobs = [JobSpec(f"j{i}", "small", SUITE) for i in range(5)]
+    sched = s.schedule(jobs)  # 1g slices at units 0..4; units 5, 6 stay free
+    survivors_before = [a for a in sched.assignments if a.placement.start >= 2]
+    ctrl = ElasticController(s)
+    ctrl.mark_failed([0, 1])
+    ev = ctrl.repack(sched)
+    assert set(ev.killed_jobs) == {"j0", "j1"}
+    # killed jobs were re-placed with bumped priority, and resumed from
+    # their checkpoints
+    replaced = [a for a in ev.new_schedule.assignments
+                if a.job.name in ev.killed_jobs]
+    assert replaced and all(a.job.priority == 10 for a in replaced)
+    assert set(ev.resumed_from_checkpoint) == set(ev.killed_jobs)
+    # survivors: identical Assignment objects, placements untouched
+    for a in survivors_before:
+        assert a in ev.new_schedule.assignments
+    assert ev.new_schedule.mode == CollocationMode.MIG
+
+
+def test_elastic_repack_shared_mode_kills_everything():
+    """No isolation outside MIG: a unit failure on a shared device takes
+    every job down and nothing is re-placed on the degraded device."""
+    db = full_db("small")
+    s = CollocationScheduler(db, mode=CollocationMode.MPS)
+    jobs = [JobSpec(f"j{i}", "small", SUITE) for i in range(2)]
+    sched = s.schedule(jobs)
+    assert sched.mode == CollocationMode.MPS
+    assert len(sched.assignments) == 2
+    ctrl = ElasticController(s)
+    ctrl.mark_failed([5])
+    ev = ctrl.repack(sched)
+    assert set(ev.killed_jobs) == {"j0", "j1"}
+    assert ev.survivors == ()
+    assert not ev.new_schedule.assignments
+    assert ev.new_schedule.mode == CollocationMode.MPS
 
 
 @given(st.sets(st.integers(0, N_UNITS - 1), max_size=6))
