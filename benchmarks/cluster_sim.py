@@ -1,5 +1,6 @@
 """Cluster-simulation tables: makespan / JCT / queueing delay / utilization
-per fleet-mode policy — the paper's dynamic-workload findings as metrics.
+/ SLO attainment / goodput per fleet-mode policy — the paper's dynamic
+findings, and the mixed training+inference extension, as metrics.
 
 Reads the (scenario x policy) cells written by ``launch/simulate.py`` from
 ``artifacts/cluster/``; if none exist, runs the simulation in-process
@@ -14,7 +15,14 @@ prints verdict lines tying the numbers back to the paper:
     models align with the MIG partitioning options");
   * live reconfiguration: the best-mode-per-device policy performed mode
     migrations and was charged their reconfiguration cost (queueing-time
-    analogue of MISO-style repartitioning).
+    analogue of MISO-style repartitioning);
+  * inference flips the verdict: on the train_serve_mix trace the fleets
+    are ordered SLO-first (SLO attainment, then goodput — a serving
+    operator's preference), and that ordering differs from the
+    training-only mixed_dynamic ordering: all-MIG's isolated slices keep
+    every decode step inside its SLO while all-MPS — the training-only
+    winner — sacrifices decode latency to the saturating training
+    neighbours' dispatch-queue pressure (MIGPerf's finding).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.cluster_sim
@@ -22,20 +30,23 @@ Usage:
 from __future__ import annotations
 
 import sys
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from benchmarks.common import load_cluster
+from benchmarks.common import Column, format_table, load_cluster
 
-_COLS = (  # (metric key, column title, width, value format)
-    ("makespan_s", "makespan", 10, "{:.2f}"),
-    ("mean_jct_s", "mean_jct", 10, "{:.2f}"),
-    ("mean_queueing_delay_s", "mean_qdly", 11, "{:.3f}"),
-    ("max_queueing_delay_s", "max_qdly", 10, "{:.3f}"),
-    ("utilization_mean", "util", 7, "{:.2f}"),
-    ("migrations", "migr", 6, "{:d}"),
-    ("reconfig_cost_s", "reconf_s", 10, "{:.1f}"),
-    ("completed", "done", 6, "{:d}"),
-    ("still_queued", "queued", 8, "{:d}"),
+_COLUMNS = (
+    Column("policy", width=11, align="<"),
+    Column("makespan_s", "makespan", "{:.2f}", 10),
+    Column("mean_jct_s", "mean_jct", "{:.2f}", 10),
+    Column("mean_queueing_delay_s", "mean_qdly", "{:.3f}", 11),
+    Column("max_queueing_delay_s", "max_qdly", "{:.3f}", 10),
+    Column("utilization_mean", "util", "{:.2f}", 7),
+    Column("slo_attainment", "slo", "{:.3f}", 7),
+    Column("goodput_steps_per_s", "goodput", "{:.0f}", 9),
+    Column("migrations", "migr", "{:d}", 6),
+    Column("reconfig_cost_s", "reconf_s", "{:.1f}", 10),
+    Column("completed", "done", "{:d}", 6),
+    Column("still_queued", "queued", "{:d}", 8),
 )
 
 
@@ -50,16 +61,10 @@ def cell_metrics(cell: Dict) -> Dict:
 
 
 def format_scenario_table(scenario: str, rows: List[Dict]) -> str:
-    hdr = f"{'policy':<11}" + "".join(
-        f"{title:>{width}}" for _, title, width, _ in _COLS
+    body = format_table(
+        _COLUMNS, sorted(rows, key=lambda r: r["policy"]), style="fixed"
     )
-    lines = [f"scenario: {scenario} ({rows[0]['n_jobs']} jobs)", hdr, "-" * len(hdr)]
-    for r in sorted(rows, key=lambda r: r["policy"]):
-        line = f"{r['policy']:<11}"
-        for key, _, width, fmt in _COLS:
-            line += f"{fmt.format(r[key]):>{width}}"
-        lines.append(line)
-    return "\n".join(lines)
+    return f"scenario: {scenario} ({rows[0]['n_jobs']} jobs)\n{body}"
 
 
 def _by(rows: List[Dict], scenario: str, policy: str) -> Optional[Dict]:
@@ -67,6 +72,18 @@ def _by(rows: List[Dict], scenario: str, policy: str) -> Optional[Dict]:
         if r["scenario"] == scenario and r["policy"] == policy:
             return r
     return None
+
+
+def fleet_ordering(rows: List[Dict], scenario: str) -> List[str]:
+    """Fleets ranked SLO-first: meet the serving SLO, then maximize
+    goodput. On a training-only trace every fleet ties at SLO 1.0 and the
+    ordering degenerates to plain goodput."""
+    mine = [r for r in rows if r["scenario"] == scenario]
+    ranked = sorted(
+        mine,
+        key=lambda r: (-r["slo_attainment"], -r["goodput_steps_per_s"], r["policy"]),
+    )
+    return [r["policy"] for r in ranked]
 
 
 def verdicts(rows: List[Dict]) -> List[str]:
@@ -104,6 +121,34 @@ def verdicts(rows: List[Dict]) -> List[str]:
         )
     else:
         out.append("[FAIL] no mode-migration events under the best policy")
+    out.extend(mixed_workload_verdicts(rows))
+    return out
+
+
+def mixed_workload_verdicts(rows: List[Dict]) -> List[str]:
+    """Does adding inference change which fleet wins? (MIGPerf)"""
+    out = []
+    smig = _by(rows, "train_serve_mix", "all-mig")
+    smps = _by(rows, "train_serve_mix", "all-mps")
+    if not (smig and smps):
+        return out
+    ok = smig["slo_attainment"] > smps["slo_attainment"]
+    out.append(
+        f"[{'OK' if ok else 'FAIL'}] MIG protects inference latency "
+        f"(train_serve_mix): SLO attainment all-mig "
+        f"{smig['slo_attainment']:.3f} > all-mps {smps['slo_attainment']:.3f} "
+        f"(isolated slices vs shared dispatch queue)"
+    )
+    train_order = fleet_ordering(rows, "mixed_dynamic")
+    mix_order = fleet_ordering(rows, "train_serve_mix")
+    if train_order and mix_order:
+        differs = train_order != mix_order
+        out.append(
+            f"[{'OK' if differs else 'FAIL'}] inference changes the "
+            f"collocation verdict: fleet ordering (SLO-first) "
+            f"training-only [{' > '.join(train_order)}] vs "
+            f"train+serve [{' > '.join(mix_order)}]"
+        )
     return out
 
 

@@ -12,7 +12,13 @@
 """
 from __future__ import annotations
 
-from benchmarks.common import PAPER_F2_SPEEDUP, by_group, csv_line, load_collocation
+from benchmarks.common import (
+    PAPER_F2_SPEEDUP,
+    CSV_COLUMNS,
+    by_group,
+    format_table,
+    load_collocation,
+)
 from repro.core.instance import InstanceRecord
 from repro.core.metrics import ModeComparison, mode_comparison
 from repro.core.sharing import STEP_LATENCY_S
@@ -66,7 +72,7 @@ def mode_rows(cells) -> list[ModeComparison]:
 
 def run() -> list[str]:
     cells = by_group(load_collocation())
-    out = []
+    rows = []
     if not cells:
         return ["collocation_throughput,SKIP,run repro.launch.collocate first"]
     workloads = sorted({w for (w, _g) in cells})
@@ -83,24 +89,24 @@ def run() -> list[str]:
             t_par = max(r["step_s"] for r in par["records"])
             speedup = (k * t_full) / t_par
             ref = f",paper={PAPER_F2_SPEEDUP:.2f}x" if (w, prof) == ("resnet_small", "1g.5gb") else ""
-            out.append(
-                csv_line(
-                    f"F2_collocation_speedup/{w}/{k}x_{prof}",
-                    f"{speedup:.2f}",
-                    f"seq_on_7g={k}x{t_full:.5f}s par={t_par:.5f}s{ref}",
-                )
+            rows.append(
+                {
+                    "name": f"F2_collocation_speedup/{w}/{k}x_{prof}",
+                    "value": f"{speedup:.2f}",
+                    "derived": f"seq_on_7g={k}x{t_full:.5f}s par={t_par:.5f}s{ref}",
+                }
             )
     # the naive-vs-MPS-vs-MIG mode comparison (paper recommendation table)
     for r in mode_rows(cells):
-        out.append(
-            csv_line(
-                f"mode_speedup/{r.workload}/{r.mode}/{r.k_jobs}x",
-                f"{r.speedup_vs_sequential:.2f}",
-                f"coll={r.effective_step_s:.5f}s solo={r.solo_step_s:.5f}s "
-                f"interference={r.max_interference:.2f}x fits={r.fits}",
-            )
+        rows.append(
+            {
+                "name": f"mode_speedup/{r.workload}/{r.mode}/{r.k_jobs}x",
+                "value": f"{r.speedup_vs_sequential:.2f}",
+                "derived": f"coll={r.effective_step_s:.5f}s solo={r.solo_step_s:.5f}s "
+                           f"interference={r.max_interference:.2f}x fits={r.fits}",
+            }
         )
-    return out
+    return format_table(CSV_COLUMNS, rows, style="csv").splitlines()
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
-"""Shared helpers for the benchmark harness: artifact loading + CSV output."""
+"""Shared helpers for the benchmark harness: artifact loading + the one
+table renderer every benchmark prints through (fixed-width, markdown, or
+CSV — see :func:`format_table`)."""
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Sequence
 
 ROOT = Path(__file__).resolve().parent.parent
 COLLOCATION_DIR = ROOT / "artifacts" / "collocation"
@@ -56,5 +59,76 @@ def by_group(cells: List[Dict]) -> Dict[tuple, Dict]:
     return {(c["workload"], c["group"]): c for c in cells if c.get("status") == "OK"}
 
 
+# -- the shared table renderer -------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    """One table column: which row key to read, how to title and format it.
+
+    ``fmt`` is a str.format template applied to the value (``"{:.2f}"``);
+    ``width`` pads fixed-width output (floored at the title width);
+    ``align`` is the format alignment char (``">"`` right, ``"<"`` left)."""
+
+    key: str
+    title: str = ""
+    fmt: str = "{}"
+    width: int = 0
+    align: str = ">"
+
+    @property
+    def header(self) -> str:
+        return self.title or self.key
+
+    def cell(self, row: Mapping) -> str:
+        return self.fmt.format(row[self.key])
+
+
+def format_table(
+    columns: Sequence[Column], rows: Sequence[Mapping], style: str = "fixed"
+) -> str:
+    """Render ``rows`` (mappings) under ``columns`` in one of three styles:
+
+      fixed     aligned fixed-width columns with a dashed header rule —
+                the terminal tables (benchmarks/cluster_sim.py);
+      markdown  GitHub pipe tables — the EXPERIMENTS.md sections
+                (benchmarks/report.py);
+      csv       headerless comma-joined rows — the ``name,value,derived``
+                currency of the CSV benchmarks (:func:`csv_line`).
+    """
+    if style == "csv":
+        return "\n".join(",".join(c.cell(r) for c in columns) for r in rows)
+    if style == "markdown":
+        lines = [
+            "| " + " | ".join(c.header for c in columns) + " |",
+            "|" + "|".join("---" for _ in columns) + "|",
+        ]
+        lines += [
+            "| " + " | ".join(c.cell(r) for c in columns) + " |" for r in rows
+        ]
+        return "\n".join(lines)
+    if style == "fixed":
+        widths = [max(c.width, len(c.header)) for c in columns]
+        hdr = "".join(
+            f"{c.header:{c.align}{w}}" for c, w in zip(columns, widths)
+        )
+        lines = [hdr, "-" * len(hdr)]
+        lines += [
+            "".join(
+                f"{c.cell(r):{c.align}{w}}" for c, w in zip(columns, widths)
+            )
+            for r in rows
+        ]
+        return "\n".join(lines)
+    raise ValueError(f"unknown table style {style!r}")
+
+
+CSV_COLUMNS = (Column("name"), Column("value"), Column("derived"))
+
+
 def csv_line(name: str, value, derived: str = "") -> str:
-    return f"{name},{value},{derived}"
+    return format_table(
+        CSV_COLUMNS,
+        [{"name": name, "value": value, "derived": derived}],
+        style="csv",
+    )

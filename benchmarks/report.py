@@ -4,76 +4,115 @@
     PYTHONPATH=src python -m benchmarks.report perf       # §Perf tagged cells
     PYTHONPATH=src python -m benchmarks.report collocate  # §Paper-claims
     PYTHONPATH=src python -m benchmarks.report modes      # naive vs MPS vs MIG
+
+All four sections render through the shared table renderer
+(benchmarks/common.py:format_table, markdown style).
 """
 from __future__ import annotations
 
-import json
 import sys
-from pathlib import Path
 
-from benchmarks.common import DRYRUN_DIR, load_collocation, load_dryrun
+from benchmarks.common import Column, format_table, load_collocation, load_dryrun
+
+_DRYRUN_COLUMNS = tuple(
+    Column(k)
+    for k in ("arch", "shape", "mesh", "compute_s", "memory_s",
+              "collective_s", "bound", "MFU", "useful", "GiB/dev")
+)
 
 
 def fmt_dryrun() -> str:
     cells = load_dryrun()
-    base = [c for c in cells if c["status"] != "FAIL" and "__" not in c["cell"].replace(
-        c["cell"].rsplit("__", 1)[0], "", 1)]
-    # separate untagged (baseline) from tagged (perf variants)
+
     def is_tagged(c):
         return len(c["cell"].split("__")) > 3
+
     rows = []
-    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s | bound | MFU | useful | GiB/dev |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
     n_ok = n_skip = 0
     for c in sorted(cells, key=lambda c: c["cell"]):
         if is_tagged(c):
             continue
         parts = c["cell"].split("__")
+        row = dict.fromkeys((col.key for col in _DRYRUN_COLUMNS), "")
+        row.update(arch=parts[0], shape=parts[1], mesh=parts[2])
         if c["status"] == "SKIP":
             n_skip += 1
-            out.append(f"| {parts[0]} | {parts[1]} | {parts[2]} | SKIP | — | — | — | — | — | {c['reason'][:40]} |")
-            continue
-        if c["status"] != "OK":
-            out.append(f"| {parts[0]} | {parts[1]} | {parts[2]} | FAIL | | | | | | |")
-            continue
-        n_ok += 1
-        r = c["roofline"]
-        out.append(
-            f"| {parts[0]} | {parts[1]} | {parts[2]} | {r['compute_s']:.4f} | "
-            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['bound']} | "
-            f"{r['mfu']:.3f} | {r['useful_flops_ratio']:.2f} | "
-            f"{r['peak_mem_bytes_per_device']/2**30:.2f} |"
-        )
-    out.insert(0, f"{n_ok} compiled cells + {n_skip} documented skips:\n")
-    return "\n".join(out)
+            row.update(compute_s="SKIP", memory_s="—", collective_s="—",
+                       bound="—", MFU="—", useful="—",
+                       **{"GiB/dev": c["reason"][:40]})
+        elif c["status"] != "OK":
+            row.update(compute_s="FAIL")
+        else:
+            n_ok += 1
+            r = c["roofline"]
+            row.update(
+                compute_s=f"{r['compute_s']:.4f}",
+                memory_s=f"{r['memory_s']:.4f}",
+                collective_s=f"{r['collective_s']:.4f}",
+                bound=r["bound"],
+                MFU=f"{r['mfu']:.3f}",
+                useful=f"{r['useful_flops_ratio']:.2f}",
+                **{"GiB/dev": f"{r['peak_mem_bytes_per_device']/2**30:.2f}"},
+            )
+        rows.append(row)
+    table = format_table(_DRYRUN_COLUMNS, rows, style="markdown")
+    return f"{n_ok} compiled cells + {n_skip} documented skips:\n\n{table}"
+
+
+_PERF_COLUMNS = (
+    Column("cell"),
+    Column("tag", "variant/tag"),
+    Column("compute_s", fmt="{:.4f}"),
+    Column("memory_s", fmt="{:.4f}"),
+    Column("collective_s", fmt="{:.4f}"),
+    Column("step_s", fmt="{:.4f}"),
+    Column("frac", fmt="{:.4f}"),
+    Column("gib", "GiB/dev", fmt="{:.2f}"),
+)
 
 
 def fmt_perf() -> str:
     cells = load_dryrun()
-    out = ["| cell | variant/tag | compute_s | memory_s | collective_s | step_s | frac | GiB/dev |",
-           "|---|---|---|---|---|---|---|---|"]
+    rows = []
     for c in sorted(cells, key=lambda c: c["cell"]):
         parts = c["cell"].split("__")
         if len(parts) <= 3 or c["status"] != "OK":
             continue
         r = c["roofline"]
-        out.append(
-            f"| {'__'.join(parts[:3])} | {parts[3]} | {r['compute_s']:.4f} | "
-            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['step_s']:.4f} | "
-            f"{r['frac_of_roofline']:.4f} | {r['peak_mem_bytes_per_device']/2**30:.2f} |"
+        rows.append(
+            {
+                "cell": "__".join(parts[:3]),
+                "tag": parts[3],
+                "compute_s": r["compute_s"],
+                "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "step_s": r["step_s"],
+                "frac": r["frac_of_roofline"],
+                "gib": r["peak_mem_bytes_per_device"] / 2**30,
+            }
         )
-    return "\n".join(out)
+    return format_table(_PERF_COLUMNS, rows, style="markdown")
+
+
+_COLLOCATE_COLUMNS = (
+    Column("workload"),
+    Column("group"),
+    Column("mode"),
+    Column("instances"),
+    Column("step_s", fmt="{:.5f}"),
+    Column("epoch_s", fmt="{:.2f}"),
+    Column("fits"),
+    Column("interference"),
+)
 
 
 def fmt_collocate() -> str:
     cells = load_collocation()
-    out = ["| workload | group | mode | instances | step_s | epoch_s | fits | interference |",
-           "|---|---|---|---|---|---|---|---|"]
+    rows = []
     for c in sorted(cells, key=lambda c: (c["workload"], c["group"])):
         if c.get("status") != "OK":
             continue
         recs = c["records"]
-        mode = c.get("mode", "mig")
         if "isolation" in c:
             iso = c["isolation"]
             proved = iso["disjoint"] and iso["programs_identical"]
@@ -81,12 +120,31 @@ def fmt_collocate() -> str:
         else:
             q = c.get("interference_quant", {})
             interf = f"{q.get('max_slowdown', 0):.2f}x predicted"
-        out.append(
-            f"| {c['workload']} | {c['group']} | {mode} | {len(recs)} | "
-            f"{recs[0]['step_s']:.5f} | {c['epoch_time_s'][0]:.2f} | "
-            f"{all(r['fits'] for r in recs)} | {interf} |"
+        rows.append(
+            {
+                "workload": c["workload"],
+                "group": c["group"],
+                "mode": c.get("mode", "mig"),
+                "instances": len(recs),
+                "step_s": recs[0]["step_s"],
+                "epoch_s": c["epoch_time_s"][0],
+                "fits": all(r["fits"] for r in recs),
+                "interference": interf,
+            }
         )
-    return "\n".join(out)
+    return format_table(_COLLOCATE_COLUMNS, rows, style="markdown")
+
+
+_MODES_COLUMNS = (
+    Column("workload"),
+    Column("mode"),
+    Column("k_jobs", "k jobs"),
+    Column("solo_step_s", "solo step_s", fmt="{:.5f}"),
+    Column("effective_step_s", "collocated step_s", fmt="{:.5f}"),
+    Column("speedup", "speedup vs sequential"),
+    Column("interference"),
+    Column("fits"),
+)
 
 
 def fmt_modes() -> str:
@@ -104,15 +162,20 @@ def fmt_modes() -> str:
     cells = by_group(load_collocation())
     if not cells:
         return "no collocation artifacts — run repro.launch.collocate first"
-    out = ["| workload | mode | k jobs | solo step_s | collocated step_s | speedup vs sequential | interference | fits |",
-           "|---|---|---|---|---|---|---|---|"]
-    for r in mode_rows(cells):
-        out.append(
-            f"| {r.workload} | {r.mode} | {r.k_jobs} | {r.solo_step_s:.5f} | "
-            f"{r.effective_step_s:.5f} | {r.speedup_vs_sequential:.2f}x | "
-            f"{r.max_interference:.2f}x | {r.fits} |"
-        )
-    return "\n".join(out)
+    rows = [
+        {
+            "workload": r.workload,
+            "mode": r.mode,
+            "k_jobs": r.k_jobs,
+            "solo_step_s": r.solo_step_s,
+            "effective_step_s": r.effective_step_s,
+            "speedup": f"{r.speedup_vs_sequential:.2f}x",
+            "interference": f"{r.max_interference:.2f}x",
+            "fits": r.fits,
+        }
+        for r in mode_rows(cells)
+    ]
+    return format_table(_MODES_COLUMNS, rows, style="markdown")
 
 
 if __name__ == "__main__":

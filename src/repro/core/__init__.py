@@ -25,3 +25,17 @@ from repro.core.cluster import (  # noqa: F401
 )
 from repro.core.events import Event, EventKind, EventQueue  # noqa: F401
 from repro.core.queueing import AdmissionQueue  # noqa: F401
+
+# Workload API v2: phase-aware demand traces, TRAIN/SERVE objectives, and
+# the flat-JobSpec single-phase adapter (also jax-free).
+from repro.core.workload import (  # noqa: F401
+    DemandTrace,
+    Phase,
+    PhaseSpan,
+    Workload,
+    WorkloadKind,
+    as_workload,
+    from_jobspec,
+    serve_workload,
+    train_workload,
+)

@@ -23,6 +23,13 @@ discrete-event loop (core/events.py):
                           remaining steps (epoch_time_s x epochs algebra);
                           frees capacity, re-times shared neighbours whose
                           contention just dropped, and re-drains the queue;
+  PHASE_TRANSITION        a placed job crosses a boundary of its workload's
+                          phase plan (core/workload.py): its demand vector
+                          changes, so a MIG job re-times itself while a
+                          shared device re-times *every* co-resident job
+                          (a neighbour entering its checkpoint burst or
+                          decode phase changes everyone's contention), and
+                          the adaptive policy gets a migration look;
   FAILURE / REPAIR        slice-unit health events; the MIG path reuses the
                           elastic-repack split (core/elastic.py) — jobs on
                           intersecting instances die, survivors keep
@@ -46,6 +53,14 @@ MIG rigidity as *measured queueing delay* rather than prose: an all-MIG
 fleet on a mixed dynamic trace accrues waiting time that an all-MPS fleet
 does not, while MIG still wins the partition-aligned static trace
 (benchmarks/cluster_sim.py prints both).
+
+Jobs are phase-aware ``Workload``s (training: warmup / steady / checkpoint;
+serving: prefill / decode) or flat ``JobSpec``s through the single-phase
+adapter. Serving jobs carry a per-step latency SLO scored over their decode
+steps; the end-of-run report adds SLO attainment and mixed-fleet goodput
+(useful train steps + SLO-met serve steps per second) to the queueing
+metrics, which is what lets benchmarks/cluster_sim.py show inference
+flipping the collocation verdict (MIGPerf's finding).
 
 Straggler mitigation folds in as an event handler too: ``observe_step``
 feeds the per-device EMA, and a flagged straggler is checkpointed,
@@ -77,6 +92,7 @@ from repro.core.instance import JobSpec
 from repro.core.profiles import N_UNITS, PROFILES
 from repro.core.queueing import AdmissionQueue
 from repro.core.sharing import CollocationMode, device_busy_fraction
+from repro.core.workload import PhaseSpan, Workload, as_workload, span_at
 
 # Live re-partitioning penalty: drain + MIG instance destroy/create + MPS
 # daemon restart + checkpoint restore of the displaced jobs. Charged per
@@ -91,12 +107,21 @@ CHECKPOINT_EVERY_EPOCHS = 1
 
 @dataclasses.dataclass
 class ClusterJob:
-    """A submitted job plus its simulation state."""
+    """A submitted job plus its simulation state.
 
-    spec: JobSpec
+    ``spec`` is either a flat ``JobSpec`` (adapted to a single steady
+    phase) or a phase-aware ``Workload``; ``plan`` is the workload's phase
+    sequence resolved onto this job's concrete step count at submit time.
+    The job's *current* phase is always derived from ``steps_done``, so
+    checkpoint rollbacks re-enter the right phase for free."""
+
+    spec: Union[JobSpec, Workload]
     arrival_s: float
     epochs: int = 1
     samples_per_epoch: int = 3200
+    plan: Tuple[PhaseSpan, ...] = ()
+    kind: str = "train"
+    slo_step_s: Optional[float] = None
     # -- runtime state ------------------------------------------------------
     steps_done: float = 0.0
     step_s: float = 0.0  # current effective step time on its device
@@ -107,12 +132,27 @@ class ClusterJob:
     migrations: int = 0
     straggler_repacks: int = 0
     lost_steps: float = 0.0  # progress re-done after checkpoint rollbacks
+    phase_transitions: int = 0
+    slo_steps: float = 0.0  # latency-sensitive steps executed (serve)
+    slo_met_steps: float = 0.0  # of those, steps whose step_s met the SLO
     token: int = 0  # completion-event generation (lazy invalidation)
     rejected_reason: Optional[str] = None
 
     @property
     def name(self) -> str:
         return self.spec.name
+
+    def current_span(self) -> PhaseSpan:
+        return span_at(self.plan, self.steps_done)
+
+    def active_demand(self):
+        return self.current_span().demand
+
+    @property
+    def slo_attainment(self) -> Optional[float]:
+        if self.slo_step_s is None or self.slo_steps <= 0:
+            return None
+        return self.slo_met_steps / self.slo_steps
 
     @property
     def steps_per_epoch(self) -> int:
@@ -152,6 +192,7 @@ class ClusterJob:
         return {
             "name": self.name,
             "arch": self.spec.arch,
+            "kind": self.kind,
             "priority": self.spec.priority,
             "arrival_s": self.arrival_s,
             "started_s": self.started_s,
@@ -159,6 +200,10 @@ class ClusterJob:
             "queueing_delay_s": self.queueing_delay_s,
             "jct_s": self.jct_s,
             "total_steps": self.total_steps,
+            "phases": [s.name for s in self.plan],
+            "phase_transitions": self.phase_transitions,
+            "slo_step_s": self.slo_step_s,
+            "slo_attainment": self.slo_attainment,
             "migrations": self.migrations,
             "straggler_repacks": self.straggler_repacks,
             "lost_steps": self.lost_steps,
@@ -220,6 +265,8 @@ class ClusterReport:
     horizon_s: float
     makespan_s: float
     completed: int
+    completed_train: int
+    completed_serve: int
     rejected: int
     still_queued: int
     still_running: int
@@ -228,6 +275,14 @@ class ClusterReport:
     mean_queueing_delay_s: float
     max_queueing_delay_s: float
     throughput_jobs_per_s: float
+    # SERVE objective: fraction of executed latency-sensitive (decode)
+    # steps whose effective step time met the session's SLO; 1.0 when the
+    # trace has no serve steps.
+    slo_attainment: float
+    # mixed-fleet goodput: useful train steps (net of rollback re-work)
+    # plus SLO-met serve steps, per second of horizon.
+    goodput_steps_per_s: float
+    phase_transitions: int
     utilization: Dict[str, float]  # device -> busy fraction, plus "mean"
     migrations: int
     reconfig_cost_s: float
@@ -296,21 +351,29 @@ class Cluster:
 
     def submit(
         self,
-        spec: JobSpec,
+        spec: Union[JobSpec, Workload],
         arrival_s: float,
         *,
         epochs: int = 1,
         samples_per_epoch: int = 3200,
     ) -> ClusterJob:
-        """Register a job to arrive at ``arrival_s`` (dynamic arrival)."""
+        """Register a job to arrive at ``arrival_s`` (dynamic arrival).
+
+        ``spec`` may be a flat ``JobSpec`` (single steady phase via the
+        adapter) or a phase-aware ``Workload``; its phase sequence is
+        resolved onto the job's concrete step count here, once."""
         if spec.name in self.jobs:
             raise KeyError(f"job {spec.name!r} already submitted")
+        wl = as_workload(spec)
         cj = ClusterJob(
             spec=spec,
             arrival_s=float(arrival_s),
             epochs=int(epochs),
             samples_per_epoch=int(samples_per_epoch),
+            kind=wl.kind.value,
+            slo_step_s=wl.slo_step_s,
         )
+        cj.plan = wl.resolve(cj.total_steps)
         self.jobs[spec.name] = cj
         self.events.push(arrival_s, EventKind.ARRIVAL, (spec.name,))
         return cj
@@ -334,6 +397,8 @@ class Cluster:
             self._on_arrival(ev.payload[0], t)
         elif ev.kind == EventKind.COMPLETION:
             self._on_completion(*ev.payload, t=t)
+        elif ev.kind == EventKind.PHASE_TRANSITION:
+            self._on_phase_transition(*ev.payload, t=t)
         elif ev.kind == EventKind.RECONFIG_DONE:
             self._on_reconfig_done(ev.payload[0], t)
         elif ev.kind == EventKind.FAILURE:
@@ -383,6 +448,36 @@ class Cluster:
             # a departure lowers the contention factors for every neighbour
             self._retime_shared(dev, t)
         self._dispatch(t)
+        self._maybe_migrate(t)
+
+    def _on_phase_transition(self, dev_name: str, name: str, token: int, *, t: float) -> None:
+        """A placed job crossed into its next phase: its demand vector — and
+        with it every shared neighbour's contention — just changed."""
+        dev = self.devices[dev_name]
+        cj = self.jobs[name]
+        if cj.token != token or name not in dev.running:
+            return  # stale event — the job was re-timed, migrated, or killed
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        # snap fp residue onto the integer boundary the event fired for, so
+        # the derived current phase is exactly the next span
+        boundary = round(cj.steps_done)
+        if abs(cj.steps_done - boundary) < 1e-6:
+            cj.steps_done = float(boundary)
+        cj.phase_transitions += 1
+        if dev.mode == CollocationMode.MIG:
+            # isolation (F3): only this job's own step time changes
+            a = dev.assignments[name]
+            cj.step_s = dev.scheduler.predict_step(
+                cj.spec, a.profile, cj.active_demand()
+            )
+            a.predicted_step_s = cj.step_s
+            self._schedule_next_event(dev, cj, t)
+        else:
+            # shared device: the new vector feeds everyone's contention
+            self._retime_shared(dev, t)
+        # a demand change is composition drift — let the adaptive policy
+        # reconsider the device partitioning
         self._maybe_migrate(t)
 
     def _on_reconfig_done(self, dev_name: str, t: float) -> None:
@@ -489,6 +584,7 @@ class Cluster:
                 blocked_units=frozenset(dev.failed_units),
                 mode=CollocationMode.MIG,
                 existing=[a.placement for a in dev.assignments.values()],
+                active_phases={cj.name: cj.active_demand()},
             )
             if not sched.assignments:
                 return False
@@ -499,7 +595,7 @@ class Cluster:
             cj.device = dev.name
             cj.step_s = a.predicted_step_s
             cj.last_update_s = t
-            self._schedule_completion(dev, cj, t)
+            self._schedule_next_event(dev, cj, t)
             return True
         # shared device (naive / MPS): re-admit the whole set so the mode's
         # contention model re-times everyone; the candidate is admitted only
@@ -507,7 +603,9 @@ class Cluster:
         if dev.failed_units:
             return False  # degraded shared device takes no new work
         specs = [j.spec for j in dev.running.values()] + [cj.spec]
-        sched = dev.scheduler.schedule(specs, mode=dev.mode)
+        active = {j.name: j.active_demand() for j in dev.running.values()}
+        active[cj.name] = cj.active_demand()
+        sched = dev.scheduler.schedule(specs, mode=dev.mode, active_phases=active)
         placed_names = {a.job.name for a in sched.assignments}
         if cj.name not in placed_names:
             return False
@@ -522,35 +620,63 @@ class Cluster:
             j = dev.running[a.job.name]
             j.step_s = a.predicted_step_s
             dev.assignments[a.job.name] = a
-            self._schedule_completion(dev, j, t)
+            self._schedule_next_event(dev, j, t)
         return True
 
     def _retime_shared(self, dev: DeviceState, t: float) -> None:
-        """Re-run the contention model after a departure (progress must
-        already be up to date at ``t``)."""
+        """Re-run the contention model after a departure or a neighbour's
+        phase transition (progress must already be up to date at ``t``) —
+        the contention inputs are the *active phase* vectors of whatever is
+        co-resident now."""
         sched = dev.scheduler.schedule(
-            [j.spec for j in dev.running.values()], mode=dev.mode
+            [j.spec for j in dev.running.values()],
+            mode=dev.mode,
+            active_phases={
+                j.name: j.active_demand() for j in dev.running.values()
+            },
         )
         for a in sched.assignments:
             j = dev.running[a.job.name]
             j.step_s = a.predicted_step_s
             dev.assignments[a.job.name] = a
-            self._schedule_completion(dev, j, t)
+            self._schedule_next_event(dev, j, t)
 
-    def _schedule_completion(self, dev: DeviceState, cj: ClusterJob, t: float) -> None:
+    def _schedule_next_event(self, dev: DeviceState, cj: ClusterJob, t: float) -> None:
+        """Schedule the job's next lifecycle event at its current step rate:
+        COMPLETION if its active phase runs to the end of the job, else the
+        PHASE_TRANSITION at the phase boundary. Either way the previous
+        pending event is token-invalidated."""
         cj.token += 1
-        finish = t + cj.remaining_steps * cj.step_s
-        self.events.push(finish, EventKind.COMPLETION, (dev.name, cj.name, cj.token))
+        span = cj.current_span()
+        if span.end_step >= cj.total_steps:
+            finish = t + cj.remaining_steps * cj.step_s
+            self.events.push(finish, EventKind.COMPLETION, (dev.name, cj.name, cj.token))
+        else:
+            boundary = t + max(0.0, span.end_step - cj.steps_done) * cj.step_s
+            self.events.push(
+                boundary, EventKind.PHASE_TRANSITION, (dev.name, cj.name, cj.token)
+            )
 
     # -- progress & utilization accounting ------------------------------------------
 
     def _update_progress(self, dev: DeviceState, t: float) -> None:
+        """Advance every running job by the elapsed interval at its current
+        step rate. Events fire at every phase boundary, so a segment never
+        straddles two phases — the whole delta belongs to the span that was
+        active at the segment's start, which is what the serve-SLO ledger
+        scores latency-sensitive (decode) steps against."""
         for j in dev.running.values():
             if j.step_s > 0:
-                j.steps_done = min(
-                    float(j.total_steps),
-                    j.steps_done + (t - j.last_update_s) / j.step_s,
+                span = j.current_span()  # span at segment start
+                delta = min(
+                    (t - j.last_update_s) / j.step_s,
+                    float(j.total_steps) - j.steps_done,
                 )
+                if delta > 0 and span.latency_sensitive and j.slo_step_s:
+                    j.slo_steps += delta
+                    if j.step_s <= j.slo_step_s:
+                        j.slo_met_steps += delta
+                j.steps_done = min(float(j.total_steps), j.steps_done + delta)
             j.last_update_s = t
 
     def _busy_fraction(self, dev: DeviceState) -> float:
@@ -563,11 +689,11 @@ class Cluster:
                 PROFILES[a.profile].mem_units for a in dev.assignments.values()
             )
             return min(1.0, occupied / N_UNITS)
-        profiles = [
-            p
-            for p in (dev.scheduler.solo_profile(j.spec) for j in dev.running.values())
-            if p is not None
-        ]
+        profiles = []
+        for j in dev.running.values():
+            p = dev.scheduler.solo_profile(j.spec)
+            if p is not None:
+                profiles.append(p.scaled(j.active_demand()))
         return device_busy_fraction(profiles)
 
     def _accrue_busy(self, dev: DeviceState, t: float) -> None:
@@ -627,6 +753,10 @@ class Cluster:
                 continue
             if dev.running and t - dev.last_migration_s < self.migration_cooldown_s:
                 continue  # empty devices may flip freely (nothing to kill)
+            # running jobs are scored at their active phase (queued ones at
+            # steady) — a device full of decode phases ranks differently
+            # from the same archs mid-checkpoint
+            active = {j.name: j.active_demand() for j in dev.running.values()}
             snapshot = dict(dev.scheduler._predicted)
             schedules: Dict[CollocationMode, Schedule] = {}
             for m in CollocationMode:
@@ -635,6 +765,7 @@ class Cluster:
                         specs,
                         blocked_units=frozenset(dev.failed_units),
                         mode=m,
+                        active_phases=active,
                     )
                 elif dev.failed_units:
                     # a degraded device cannot run a shared mode at all
@@ -643,7 +774,9 @@ class Cluster:
                     # MPS and then strand every job
                     schedules[m] = Schedule([], [], mode=m)
                 else:
-                    schedules[m] = dev.scheduler.schedule(specs, mode=m)
+                    schedules[m] = dev.scheduler.schedule(
+                        specs, mode=m, active_phases=active
+                    )
             # trial schedules must not poison the straggler predictions of
             # the jobs actually deployed
             dev.scheduler._predicted = snapshot
@@ -746,12 +879,24 @@ class Cluster:
             for d in self.devices.values()
         }
         util["mean"] = sum(util.values()) / len(self.devices)
+        slo_steps = sum(j.slo_steps for j in self.jobs.values())
+        slo_met = sum(j.slo_met_steps for j in self.jobs.values())
+        useful_steps = sum(
+            (j.slo_met_steps if j.kind == "serve" else j.steps_done)
+            for j in self.jobs.values()
+        )
         return ClusterReport(
             policy=self.policy,
             n_devices=len(self.devices),
             horizon_s=horizon,
             makespan_s=makespan,
             completed=len(self.completed),
+            completed_train=sum(
+                1 for n in self.completed if self.jobs[n].kind == "train"
+            ),
+            completed_serve=sum(
+                1 for n in self.completed if self.jobs[n].kind == "serve"
+            ),
             rejected=len(self.rejected),
             still_queued=len(self.queue),
             still_running=sum(len(d.running) for d in self.devices.values()),
@@ -761,6 +906,11 @@ class Cluster:
             max_queueing_delay_s=delays[-1] if delays else 0.0,
             throughput_jobs_per_s=(
                 len(self.completed) / makespan if makespan > 0 else 0.0
+            ),
+            slo_attainment=(slo_met / slo_steps if slo_steps > 0 else 1.0),
+            goodput_steps_per_s=(useful_steps / horizon if horizon > 0 else 0.0),
+            phase_transitions=sum(
+                j.phase_transitions for j in self.jobs.values()
             ),
             utilization=util,
             migrations=sum(d.migrations for d in self.devices.values()),

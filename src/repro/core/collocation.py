@@ -29,11 +29,17 @@ The characterization DB is a dict {(arch, shape, profile): record-dict}
 produced by ``launch/collocate.py`` (compiled dry-runs per instance shape) —
 the same artifact the paper builds by measuring 135 hours of runs, built
 here in minutes analytically.
+
+Jobs may be flat ``JobSpec``s or phase-aware ``Workload``s
+(core/workload.py) — the two share the fields the scheduler reads.
+Admission always budgets the *phase-peak* working set; predicted step times
+are for each job's currently active phase (``active_phases``), defaulting
+to steady — which reproduces the flat-JobSpec numbers exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.instance import JobSpec, compute_discount
 from repro.core.profiles import (
@@ -48,6 +54,12 @@ from repro.core.sharing import (
     SharedModeReport,
     SoloProfile,
     shared_mode_report,
+)
+from repro.core.workload import (
+    STEADY_DEMAND,
+    DemandTrace,
+    peak_demand_multiplier,
+    phase_step_s,
 )
 from repro.telemetry.constants import HBM_PER_CHIP
 
@@ -164,15 +176,31 @@ class CollocationScheduler:
 
     # -- admission ------------------------------------------------------------
 
-    def admissible(self, job: JobSpec, profile: str) -> Tuple[bool, str]:
+    def admissible(self, job, profile: str) -> Tuple[bool, str]:
+        """Memory admission on the job's *phase-peak* working set.
+
+        A placement must survive the job's hungriest phase (e.g. the
+        checkpoint burst's serialization buffer), so the record's steady
+        footprint is scaled by the workload's peak demand multiplier. Flat
+        ``JobSpec``s have multiplier 1.0 and keep the record's own ``fits``
+        verdict bit-for-bit; a phase-aware workload re-evaluates against
+        the HBM budget — which can also *admit* where steady training OOMs
+        (a serve session's decode working set is roughly half a train
+        step's)."""
         rec = self.char_db.get((job.arch, job.suite.name, profile))
         if rec is None:
             return False, f"no characterization for {(job.arch, job.suite.name, profile)}"
-        if not rec.get("fits", False):
-            need = rec["peak_bytes_per_device"] / 2**30
+        mult = peak_demand_multiplier(job)
+        if mult == 1.0:
+            fits = rec.get("fits", False)
+        else:
+            fits = rec.get("peak_bytes_per_device", 0.0) * mult <= HBM_PER_CHIP
+        if not fits:
+            need = rec["peak_bytes_per_device"] * mult / 2**30
             have = HBM_PER_CHIP / 2**30
             return False, (
-                f"OOM: needs {need:.1f} GiB/chip > {have:.1f} GiB HBM on {profile}"
+                f"OOM: needs {need:.1f} GiB/chip (phase peak) "
+                f"> {have:.1f} GiB HBM on {profile}"
             )
         return True, ""
 
@@ -196,6 +224,7 @@ class CollocationScheduler:
         blocked_units: frozenset = frozenset(),
         mode: Optional[CollocationMode] = None,
         existing: Sequence[Placement] = (),
+        active_phases: Optional[Mapping[str, DemandTrace]] = None,
     ) -> Schedule:
         """Place ``jobs`` under ``mode`` (defaults to the scheduler's own).
 
@@ -208,10 +237,19 @@ class CollocationScheduler:
         admission path): their units are occupied AND they participate in
         layout validation, so profile exclusions and the compute-slice
         budget hold across the union, not just the new jobs. NAIVE/MPS
-        share the full device instead — see ``_schedule_shared``."""
+        share the full device instead — see ``_schedule_shared``.
+
+        ``active_phases`` maps job name -> the demand vector of the phase
+        the job is *currently in* (core/workload.py): predicted step times
+        are for that phase, and the shared-mode contention models consume
+        the active-phase vectors of the whole co-resident set. Memory
+        admission always uses phase-peak regardless. Jobs absent from the
+        map are timed at their steady (identity) demand — the flat-JobSpec
+        behaviour."""
         mode = CollocationMode(mode if mode is not None else self.mode)
+        active_phases = active_phases or {}
         if mode != CollocationMode.MIG:
-            return self._schedule_shared(jobs, mode)
+            return self._schedule_shared(jobs, mode, active_phases)
         # (the MIG overhead slice is a *compute* budget — enforced by
         # validate_layout's 7-slice check — not a blocked memory unit)
         free = [True] * N_UNITS
@@ -263,15 +301,24 @@ class CollocationScheduler:
                     continue
                 pl = try_place(prof)
                 if pl is not None:
-                    rec = self.char_db[(job.arch, job.suite.name, prof)]
-                    a = Assignment(job, pl, float(rec["step_s"]))
+                    demand = active_phases.get(job.name, STEADY_DEMAND)
+                    a = Assignment(job, pl, self.predict_step(job, prof, demand))
                     assignments.append(a)
-                    self._predicted[job.name] = a.predicted_step_s
                     placed = True
                     break
             if not placed:
                 rejections.append(Rejection(job, "no free placement slot"))
         return Schedule(assignments, rejections, mode=CollocationMode.MIG)
+
+    def predict_step(self, job, profile: str, demand: DemandTrace = STEADY_DEMAND) -> float:
+        """Predicted per-step time of ``job`` on a MIG ``profile`` under a
+        phase's demand vector, recorded for straggler detection. The one
+        source of truth for MIG step prediction — the scheduler's packing
+        path and the cluster's phase-transition re-timing both call it."""
+        rec = self.char_db[(job.arch, job.suite.name, profile)]
+        step = float(phase_step_s(rec, demand))
+        self._predicted[job.name] = step
+        return step
 
     # -- shared modes (naive / MPS) ------------------------------------------------
 
@@ -288,15 +335,22 @@ class CollocationScheduler:
         )
 
     def _schedule_shared(
-        self, jobs: Sequence[JobSpec], mode: CollocationMode
+        self,
+        jobs: Sequence[JobSpec],
+        mode: CollocationMode,
+        active_phases: Mapping[str, DemandTrace] = {},
     ) -> Schedule:
         """Place jobs together on the full device under a shared mode.
 
         Admission is the paper's memory constraint: shared modes replicate
         every job's working set on every chip, so per-chip footprints add
-        and the aggregate must fit HBM. Jobs are admitted in priority order
-        until the budget is exhausted; the mode's contention model then
-        predicts every admitted job's effective step time.
+        and the aggregate must fit HBM — budgeted at each job's *phase-peak*
+        footprint, since a neighbour's checkpoint burst lands in the same
+        memory space. Jobs are admitted in priority order until the budget
+        is exhausted; the mode's contention model then predicts every
+        admitted job's effective step time from the *currently active*
+        phase vectors (a decode-heavy neighbour loads the memory system and
+        dispatch queue very differently from a checkpoint burst).
         """
         assignments: List[Assignment] = []
         rejections: List[Rejection] = []
@@ -314,24 +368,32 @@ class CollocationScheduler:
                     )
                 )
                 continue
-            rec = self.char_db[(job.arch, job.suite.name, _FULL_PROFILE)]
-            if not rec.get("fits", False):
+            peak_mult = peak_demand_multiplier(job)
+            peak_bytes = prof.peak_bytes_per_device * peak_mult
+            solo_fits = (
+                self.char_db[(job.arch, job.suite.name, _FULL_PROFILE)].get("fits", False)
+                if peak_mult == 1.0
+                else peak_bytes <= budget
+            )
+            if not solo_fits:
                 rejections.append(
                     Rejection(job, "OOM: does not fit the full device solo")
                 )
                 continue
-            if used + prof.peak_bytes_per_device > budget:
+            if used + peak_bytes > budget:
                 rejections.append(
                     Rejection(
                         job,
-                        f"OOM under {mode.value}: aggregate footprint "
-                        f"{(used + prof.peak_bytes_per_device) / 2**30:.1f} GiB "
+                        f"OOM under {mode.value}: aggregate phase-peak "
+                        f"footprint {(used + peak_bytes) / 2**30:.1f} GiB "
                         f"> {budget / 2**30:.1f} GiB shared HBM",
                     )
                 )
                 continue
-            used += prof.peak_bytes_per_device
-            admitted.append((job, prof))
+            used += peak_bytes
+            admitted.append(
+                (job, prof.scaled(active_phases.get(job.name, STEADY_DEMAND)))
+            )
 
         report = None
         if admitted:

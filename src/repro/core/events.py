@@ -10,7 +10,12 @@ event heap. Everything that changes cluster state is an event:
   RECONFIG_DONE  a device finishes a mode migration (MIG re-partitioning /
                  MPS daemon restart) and rejoins the fleet;
   FAILURE        slice units on a device go unhealthy (elastic repack);
-  REPAIR         failed units return to health (elastic scale-up).
+  REPAIR         failed units return to health (elastic scale-up);
+  PHASE_TRANSITION  a placed job crosses a phase boundary of its workload
+                 plan (core/workload.py) — its demand vector changes, so
+                 shared devices re-time every neighbour and the adaptive
+                 policy gets a chance to reconsider the partitioning.
+                 Token-invalidated exactly like COMPLETION.
 
 Determinism contract: events at equal times are processed in push order
 (``seq`` breaks ties), so a run is a pure function of the submitted trace —
@@ -37,6 +42,7 @@ class EventKind(str, enum.Enum):
     RECONFIG_DONE = "reconfig_done"
     FAILURE = "failure"
     REPAIR = "repair"
+    PHASE_TRANSITION = "phase_transition"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,11 +31,18 @@ fractions* (the DCGM analogues SMACT / DRAMA) follow as ``u_r = r / step_s``.
 MPS — spatial sharing with bandwidth contention. Concurrent jobs share each
 resource proportionally: resource ``r``'s contention factor is
 ``F_r = max(1, sum_j u_rj)``; job i's effective terms are ``r_i * F_r`` and
-its effective step is ``latency_i + max_r(r_i * F_r)``. Sub-saturating mixes
-(all ``sum u_r <= 1``) run interference-free — the paper's headline
-collocation win; saturated mixes stretch proportionally, which conserves
-aggregate resource throughput (fair sharing). All jobs share one memory
-space: aggregate footprint must fit the device (the paper's OOM constraint).
+its effective step is ``latency_i * F_lat + max_r(r_i * F_r)``, where the
+dispatch-latency factor ``F_lat = max(1, sum_j u_compute_j)`` models kernel
+launches queueing behind co-resident jobs' in-flight compute once aggregate
+SM demand saturates. Sub-saturating mixes (all ``sum u_r <= 1``) run
+interference-free — the paper's headline collocation win; saturated mixes
+stretch proportionally, which conserves aggregate resource throughput (fair
+sharing). The latency term is what makes training+inference mixes behave
+differently from training-only mixes (MIGPerf's finding): a decode step is
+almost all dispatch latency, so a saturating training neighbour inflates
+its p99 even when no bandwidth resource is contended. All jobs share one
+memory space: aggregate footprint must fit the device (the paper's OOM
+constraint).
 
 NAIVE — time-slicing with switch overhead. Each quantum runs one job
 exclusively; nothing overlaps across jobs, so a scheduling round costs the
@@ -51,7 +58,8 @@ is exactly 1.0, and memory admission is per-slice (core/collocation.py).
 
 A useful theorem (test_sharing.py asserts it on the paper grid): MPS
 aggregate throughput >= naive aggregate throughput for *any* job mix —
-``step_mps_i <= k * step_i`` since every ``F_r <= k``, so by AM-HM
+``step_mps_i <= k * step_i`` since every ``F_r <= k`` and ``F_lat <= k``
+(each activity fraction is at most 1), so by AM-HM
 ``sum 1/step_mps_i >= k / sum step_j > naive``'s ``k / ((1+o) sum step_j)``.
 """
 from __future__ import annotations
@@ -105,6 +113,23 @@ class SoloProfile:
     def activity(self, resource: str) -> float:
         """DCGM-analogue busy fraction of ``resource`` over the solo step."""
         return getattr(self, resource) / self.step_s if self.step_s else 0.0
+
+    def scaled(self, demand) -> "SoloProfile":
+        """This profile under a phase's demand vector (core/workload.py):
+        every roofline term, the latency floor, and the working set are
+        multiplied by the phase's per-resource demand. Identity demand
+        returns ``self`` unchanged, so flat (steady-only) jobs keep their
+        exact old contention inputs."""
+        if getattr(demand, "is_identity", False):
+            return self
+        return SoloProfile(
+            name=self.name,
+            compute_s=self.compute_s * demand.compute,
+            memory_s=self.memory_s * demand.memory,
+            collective_s=self.collective_s * demand.collective,
+            latency_s=self.latency_s * demand.latency,
+            peak_bytes_per_device=self.peak_bytes_per_device * demand.mem_bytes,
+        )
 
     @classmethod
     def from_record(
@@ -183,17 +208,24 @@ def mps_contention(
 
     The interference factor per resource is the aggregate activity demand
     ``sum_j u_rj`` from the roofline telemetry, floored at 1 (idle capacity
-    absorbs sub-saturating demand for free).
+    absorbs sub-saturating demand for free). The dispatch-latency floor
+    contends on aggregate *compute* activity: kernel launches queue behind
+    in-flight kernels once the SMs saturate, which is how a saturating
+    training neighbour hurts a latency-dominated decode step even though no
+    bandwidth resource is oversubscribed (the MIGPerf mechanism).
     """
     contention = {}
     for r in _RESOURCES:
         demand = sum(j.activity(r) for j in jobs)
         contention[r] = max(1.0, demand)
+    contention["latency_s"] = max(
+        1.0, sum(j.activity("compute_s") for j in jobs)
+    )
     eff: Dict[str, float] = {}
     interference: Dict[str, float] = {}
     for j in jobs:
         busy = max(getattr(j, r) * contention[r] for r in _RESOURCES)
-        step = j.latency_s + busy
+        step = j.latency_s * contention["latency_s"] + busy
         eff[j.name] = step
         interference[j.name] = step / j.step_s if j.step_s else 1.0
     return SharedModeReport(
@@ -229,7 +261,7 @@ def naive_contention(
         mode=CollocationMode.NAIVE,
         effective_step_s=eff,
         interference=interference,
-        contention={r: 1.0 for r in _RESOURCES},  # exclusive while scheduled
+        contention=dict.fromkeys((*_RESOURCES, "latency_s"), 1.0),  # exclusive while scheduled
         aggregate_peak_bytes=_aggregate_peak(jobs),
         hbm_budget_bytes=hbm_budget_bytes,
     )
@@ -253,7 +285,7 @@ def mig_report(
         mode=CollocationMode.MIG,
         effective_step_s=eff,
         interference={j.name: 1.0 for j in jobs},
-        contention={r: 1.0 for r in _RESOURCES},
+        contention=dict.fromkeys((*_RESOURCES, "latency_s"), 1.0),
         aggregate_peak_bytes=0.0,
         hbm_budget_bytes=hbm_budget_bytes,
     )

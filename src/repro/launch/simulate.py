@@ -19,7 +19,16 @@ differences are pure policy effects:
     drift            the composition drifts mid-trace (partition-aligned
                      burst, then a flood of tiny jobs) — exercises live
                      mode migration under the ``best`` policy, including
-                     its checkpoint-rollback + reconfiguration charge.
+                     its checkpoint-rollback + reconfiguration charge;
+    train_serve_mix  phase-aware training jobs (warmup / steady /
+                     checkpoint) interleaved with Poisson inference
+                     sessions (prefill / latency-SLO decode) over the
+                     registry's serve shapes — the MIGPerf mixed fleet.
+                     The per-fleet SLO-attainment and goodput columns show
+                     inference flipping the collocation verdict: MIG's
+                     isolated slices protect decode latency that MPS's
+                     shared dispatch queue sacrifices to the saturating
+                     training neighbours.
 
   policies
     all-mig / all-mps / all-naive   homogeneous static fleets;
@@ -51,7 +60,7 @@ import json
 import random
 import traceback
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ShapeSuite
 from repro.configs.registry import CONFIGS
@@ -59,6 +68,7 @@ from repro.core.cluster import Cluster
 from repro.core.instance import JobSpec, compute_discount
 from repro.core.profiles import N_UNITS, PROFILES
 from repro.core.sharing import STEP_LATENCY_S, CollocationMode
+from repro.core.workload import Workload, serve_workload, train_workload
 from repro.telemetry.constants import HBM_PER_CHIP
 
 # One shape suite for the whole simulation: batch 32 (the paper's §3.4
@@ -94,7 +104,30 @@ _MIX = (  # mixed_dynamic draw weights
     ("resnet_large", 0.15),
 )
 
-SCENARIOS = ("aligned_static", "mixed_dynamic", "drift")
+# train_serve_mix: phase-aware training jobs (warmup/steady/checkpoint) are
+# drawn from the saturating archs — their steady compute demand is what
+# loads the MPS dispatch queue — while inference sessions (prefill/decode,
+# latency-sensitive) are drawn from the small archs whose decode working
+# set tiles MIG's 1g.5gb slices.
+_TRAIN_MIX = (
+    ("llama3-8b", 0.40),
+    ("resnet_medium", 0.30),
+    ("resnet_large", 0.15),
+    ("resnet_small", 0.15),
+)
+_SERVE_MIX = (("whisper-base", 0.55), ("granite-3-2b", 0.45))
+
+# The registry's serve shape: same shape-suite name as SIM_SUITE (the char
+# DB is keyed by suite *name*), decode kind like configs.base.DECODE_32K.
+SERVE_SUITE = ShapeSuite("sim", 1024, 32, "decode")
+
+# Per-arch p99 step-latency SLO for inference sessions: ~15% headroom over
+# the decode step on a MIG 1g.5gb slice, so an isolated slice always
+# attains it while a dispatch-queue factor F_lat >= ~1.4 under shared
+# collocation with saturating training neighbours misses it.
+SERVE_SLO_S = {"whisper-base": 1.4e-3, "granite-3-2b": 1.35e-3}
+
+SCENARIOS = ("aligned_static", "mixed_dynamic", "drift", "train_serve_mix")
 POLICIES = ("all-mig", "all-mps", "all-naive", "best")
 
 
@@ -149,17 +182,21 @@ def load_char_db(artifact_dir: Path) -> Dict[Tuple[str, str, str], dict]:
 
 # -- trace generation --------------------------------------------------------------
 
-TraceItem = Tuple[float, JobSpec, int]  # (arrival_s, spec, epochs)
+TraceItem = Tuple[float, Union[JobSpec, Workload], int]  # (arrival_s, spec, epochs)
 
 
-def _pick_arch(rng: random.Random) -> str:
+def _weighted(rng: random.Random, mix) -> str:
     x = rng.random()
     acc = 0.0
-    for arch, w in _MIX:
+    for arch, w in mix:
         acc += w
         if x < acc:
             return arch
-    return _MIX[-1][0]
+    return mix[-1][0]
+
+
+def _pick_arch(rng: random.Random) -> str:
+    return _weighted(rng, _MIX)
 
 
 def aligned_static_trace(rng: random.Random, n_jobs: int, n_devices: int) -> List[TraceItem]:
@@ -202,6 +239,39 @@ def drift_trace(rng: random.Random, n_jobs: int, n_devices: int) -> List[TraceIt
     return trace
 
 
+def train_serve_mix_trace(
+    rng: random.Random, n_jobs: int, *, mean_interarrival_s: float = 0.05
+) -> List[TraceItem]:
+    """Training jobs and inference sessions interleaved on one Poisson
+    stream — the mixed fleet MIGPerf measures. ~40% of arrivals are
+    phase-aware training jobs over the saturating archs; the rest are
+    latency-SLO inference sessions (priority 1: latency-sensitive work is
+    dispatched ahead of batch training) whose 100-step session is a
+    prefill burst plus an elastic decode tail."""
+    trace: List[TraceItem] = []
+    t = 0.0
+    for i in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival_s)
+        if rng.random() < 0.4:
+            arch = _weighted(rng, _TRAIN_MIX)
+            wl = train_workload(
+                f"tr{i}", arch, SIM_SUITE, warmup_steps=5, checkpoint_steps=3
+            )
+            trace.append((t, wl, rng.randint(1, 2)))
+        else:
+            arch = _weighted(rng, _SERVE_MIX)
+            wl = serve_workload(
+                f"sv{i}",
+                arch,
+                SERVE_SUITE,
+                slo_step_s=SERVE_SLO_S[arch],
+                prefill_steps=4,
+                priority=1,
+            )
+            trace.append((t, wl, 1))
+    return trace
+
+
 def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[TraceItem]:
     # fresh, scenario-salted RNG: identical trace for every policy
     rng = random.Random(f"{seed}:{scenario}")
@@ -211,7 +281,11 @@ def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[Tr
         return mixed_dynamic_trace(rng, n_jobs)
     if scenario == "drift":
         return drift_trace(rng, n_jobs, n_devices)
-    raise KeyError(f"unknown scenario {scenario!r}; available: {SCENARIOS}")
+    if scenario == "train_serve_mix":
+        return train_serve_mix_trace(rng, n_jobs)
+    raise ValueError(
+        f"unknown scenario {scenario!r}; choose from: {', '.join(SCENARIOS)}"
+    )
 
 
 def make_fleet(policy: str, n_devices: int) -> Tuple[List[Tuple[str, CollocationMode]], str]:
@@ -227,7 +301,9 @@ def make_fleet(policy: str, n_devices: int) -> Tuple[List[Tuple[str, Collocation
         # start from the paper's single-user recommendation (MPS) and let
         # per-device best_mode re-partition live as the mix drifts
         return [(f"d{i}", CollocationMode.MPS) for i in range(n_devices)], "adaptive"
-    raise KeyError(f"unknown policy {policy!r}; available: {POLICIES}")
+    raise ValueError(
+        f"unknown fleet policy {policy!r}; choose from: {', '.join(POLICIES)}"
+    )
 
 
 # -- cell execution ----------------------------------------------------------------
@@ -283,11 +359,16 @@ def summarize_cell(cell: Dict) -> Dict:
         "max_queueing_delay_s": r["max_queueing_delay_s"],
         "utilization_mean": r["utilization"]["mean"],
         "completed": r["completed"],
+        "completed_train": r.get("completed_train", r["completed"]),
+        "completed_serve": r.get("completed_serve", 0),
         "rejected": r["rejected"],
         "still_queued": r["still_queued"],
         "migrations": r["migrations"],
         "reconfig_cost_s": r["reconfig_cost_s"],
         "lost_steps": r["lost_steps"],
+        "slo_attainment": r.get("slo_attainment", 1.0),
+        "goodput_steps_per_s": r.get("goodput_steps_per_s", 0.0),
+        "phase_transitions": r.get("phase_transitions", 0),
     }
 
 
@@ -348,14 +429,33 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "instead of the synthetic catalog")
     args = ap.parse_args(argv)
 
+    # fail fast with the registered choices listed — not a KeyError
+    # traceback (or a silently FAILed artifact cell) deep in the run loop
+    scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    policies = [p.strip() for p in args.policies.split(",") if p.strip()]
+    unknown = [s for s in scenarios if s not in SCENARIOS]
+    if unknown:
+        ap.error(
+            f"unknown scenario(s): {', '.join(unknown)} "
+            f"(choose from: {', '.join(SCENARIOS)})"
+        )
+    unknown = [p for p in policies if p not in POLICIES]
+    if unknown:
+        ap.error(
+            f"unknown fleet polic(y|ies): {', '.join(unknown)} "
+            f"(choose from: {', '.join(POLICIES)})"
+        )
+    if not scenarios or not policies:
+        ap.error("need at least one scenario and one fleet policy")
+
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
     char_db = load_char_db(Path(args.db)) if args.db else synthetic_char_db()
 
     summaries: List[Dict] = []
     failures = 0
-    for scenario in args.scenarios.split(","):
-        for policy in args.policies.split(","):
+    for scenario in scenarios:
+        for policy in policies:
             try:
                 cell = run_cell(
                     scenario,

@@ -1,0 +1,39 @@
+"""Scenario/fleet registration: unknown names fail fast with the
+registered choices listed, never a KeyError traceback mid-run."""
+import pytest
+
+from repro.launch import simulate
+
+
+def test_unknown_scenario_errors_with_choices(capsys):
+    with pytest.raises(SystemExit) as exc:
+        simulate.main(["--scenarios", "bogus_scenario"])
+    assert exc.value.code == 2  # argparse error, not a traceback
+    err = capsys.readouterr().err
+    assert "bogus_scenario" in err
+    for known in simulate.SCENARIOS:
+        assert known in err
+
+
+def test_unknown_policy_errors_with_choices(capsys):
+    with pytest.raises(SystemExit) as exc:
+        simulate.main(["--policies", "all-tpu"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "all-tpu" in err
+    for known in simulate.POLICIES:
+        assert known in err
+
+
+def test_empty_selection_errors(capsys):
+    with pytest.raises(SystemExit) as exc:
+        simulate.main(["--scenarios", ","])
+    assert exc.value.code == 2
+    assert "at least one" in capsys.readouterr().err
+
+
+def test_make_trace_and_make_fleet_raise_value_error_with_choices():
+    with pytest.raises(ValueError, match="aligned_static.*train_serve_mix"):
+        simulate.make_trace("nope", 0, 10, 2)
+    with pytest.raises(ValueError, match="all-mig.*best"):
+        simulate.make_fleet("nope", 2)

@@ -1,0 +1,241 @@
+"""Workload API v2: demand traces, phase resolution, the JobSpec adapter,
+phase-peak admission, and active-phase contention."""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import ShapeSuite
+from repro.core.collocation import _PROFILE_ORDER, CollocationScheduler
+from repro.core.instance import JobSpec
+from repro.core.sharing import CollocationMode, SoloProfile
+from repro.core.workload import (
+    CHECKPOINT_DEMAND,
+    DECODE_DEMAND,
+    STEADY_DEMAND,
+    DemandTrace,
+    Phase,
+    Workload,
+    WorkloadKind,
+    as_workload,
+    from_jobspec,
+    peak_demand_multiplier,
+    phase_step_s,
+    serve_workload,
+    span_at,
+    train_workload,
+)
+from repro.telemetry.constants import HBM_PER_CHIP
+
+SUITE = ShapeSuite("t", 1024, 32, "train")
+
+
+def full_db(arch, *, step_s=1.0, compute_s=None, memory_s=0.0,
+            collective_s=0.0, peak_frac=0.1, fits_by_prof=None):
+    fits_by_prof = fits_by_prof or {}
+    return {
+        (arch, SUITE.name, p): {
+            "fits": fits_by_prof.get(p, True),
+            "step_s": step_s,
+            "compute_s": step_s if compute_s is None else compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "peak_bytes_per_device": peak_frac * HBM_PER_CHIP,
+        }
+        for p in _PROFILE_ORDER
+    }
+
+
+# -- DemandTrace + phase_step_s ------------------------------------------------
+
+
+def test_steady_demand_is_identity():
+    assert STEADY_DEMAND.is_identity
+    assert not CHECKPOINT_DEMAND.is_identity
+    with pytest.raises(ValueError):
+        DemandTrace(compute=-0.1)
+
+
+def test_phase_step_identity_reproduces_record_exactly():
+    rec = {"step_s": 0.0123, "compute_s": 0.01, "memory_s": 0.004,
+           "collective_s": 0.001}
+    assert phase_step_s(rec, STEADY_DEMAND) == 0.0123
+
+
+def test_phase_step_scales_terms_and_latency_residual():
+    # busy = compute 0.01; residual latency = 0.002
+    rec = {"step_s": 0.012, "compute_s": 0.01, "memory_s": 0.004,
+           "collective_s": 0.0}
+    d = DemandTrace(compute=0.1, memory=2.0, latency=3.0)
+    # scaled busy = max(0.001, 0.008) = 0.008; latency 0.002 * 3
+    assert phase_step_s(rec, d) == pytest.approx(0.006 + 0.008)
+
+
+def test_phase_step_minimal_record_defaults_compute_to_step():
+    rec = {"step_s": 1.0}  # hand-built DBs carry only step_s
+    assert phase_step_s(rec, DemandTrace(compute=0.5)) == pytest.approx(0.5)
+
+
+# -- phase resolution ----------------------------------------------------------
+
+
+def test_resolve_elastic_phase_absorbs_remainder():
+    wl = train_workload("t", "a", SUITE, warmup_steps=5, checkpoint_steps=3)
+    spans = wl.resolve(100)
+    assert [(s.name, s.start_step, s.end_step) for s in spans] == [
+        ("warmup", 0, 5), ("steady", 5, 97), ("checkpoint", 97, 100)
+    ]
+    assert span_at(spans, 0.0).name == "warmup"
+    assert span_at(spans, 5.0).name == "steady"  # boundary enters next span
+    assert span_at(spans, 99.5).name == "checkpoint"
+    assert span_at(spans, 250.0).name == "checkpoint"  # past the end: last
+
+
+def test_resolve_clamps_when_total_smaller_than_fixed_phases():
+    wl = train_workload("t", "a", SUITE, warmup_steps=5, checkpoint_steps=3)
+    spans = wl.resolve(4)  # smaller than warmup alone
+    assert spans[0].name == "warmup" and spans[0].steps == 4
+    assert spans[-1].end_step == 4
+    # spans partition [0, total) exactly for any total
+    for total in (1, 2, 5, 7, 8, 9, 100):
+        spans = wl.resolve(total)
+        assert spans[0].start_step == 0 and spans[-1].end_step == total
+        for a, b in zip(spans, spans[1:]):
+            assert a.end_step == b.start_step
+
+
+def test_resolve_without_elastic_phase_extends_tail():
+    wl = Workload("t", "a", SUITE, phases=(Phase("p1", steps=2),
+                                           Phase("p2", steps=3)))
+    spans = wl.resolve(10)
+    assert spans[-1].name == "p2" and spans[-1].end_step == 10
+
+
+def test_at_most_one_elastic_phase():
+    with pytest.raises(ValueError):
+        Workload("t", "a", SUITE, phases=(Phase("p1"), Phase("p2")))
+    with pytest.raises(ValueError):
+        Workload("t", "a", SUITE, phases=())
+
+
+# -- constructors + adapter ----------------------------------------------------
+
+
+def test_train_and_serve_constructors():
+    tr = train_workload("t", "a", SUITE)
+    assert tr.kind == WorkloadKind.TRAIN and tr.objective == "throughput"
+    assert [p.name for p in tr.phases] == ["warmup", "steady", "checkpoint"]
+    sv = serve_workload("s", "a", SUITE, slo_step_s=1e-3)
+    assert sv.kind == WorkloadKind.SERVE and sv.objective == "slo"
+    assert sv.slo_step_s == 1e-3
+    decode = sv.phases[-1]
+    assert decode.latency_sensitive and decode.steps is None
+
+
+def test_jobspec_adapter_roundtrip():
+    spec = JobSpec("j", "a", SUITE, priority=3, min_profile="2g.10gb")
+    wl = from_jobspec(spec)
+    assert (wl.name, wl.arch, wl.priority, wl.min_profile) == (
+        "j", "a", 3, "2g.10gb"
+    )
+    assert len(wl.phases) == 1 and wl.phases[0].demand.is_identity
+    assert wl.peak_demand_multiplier == 1.0
+    assert as_workload(wl) is wl
+    assert peak_demand_multiplier(spec) == 1.0
+    with pytest.raises(TypeError):
+        as_workload("not a job")
+
+
+def test_workload_supports_dataclasses_replace_like_jobspec():
+    """The cluster's displacement paths replace priority/min_profile on the
+    spec — a Workload must survive them with its phases intact."""
+    wl = serve_workload("s", "a", SUITE, slo_step_s=1e-3)
+    bumped = dataclasses.replace(wl, priority=10, min_profile="3g.20gb")
+    assert bumped.priority == 10 and bumped.phases == wl.phases
+    assert bumped.slo_step_s == wl.slo_step_s
+
+
+# -- scheduler integration -----------------------------------------------------
+
+
+def test_scheduler_predictions_identical_for_jobspec_and_adapter():
+    db = full_db("a", step_s=0.01)
+    s = CollocationScheduler(db)
+    spec = JobSpec("j", "a", SUITE)
+    for mode in CollocationMode:
+        via_spec = s.schedule([spec], mode=mode)
+        via_wl = s.schedule([from_jobspec(spec)], mode=mode)
+        assert [a.predicted_step_s for a in via_spec.assignments] == [
+            a.predicted_step_s for a in via_wl.assignments
+        ]
+
+
+def test_admission_uses_phase_peak_memory():
+    """A workload whose checkpoint burst overflows a slice is rejected
+    there even though its steady footprint fits."""
+    db = full_db("a", step_s=0.01, peak_frac=0.97)  # steady fits everywhere
+    s = CollocationScheduler(db)
+    flat = JobSpec("flat", "a", SUITE)
+    assert s.admissible(flat, "1g.5gb")[0]  # record's own fits bit
+    bursty = train_workload("bursty", "a", SUITE)  # checkpoint mem_bytes 1.05
+    ok, why = s.admissible(bursty, "1g.5gb")
+    assert not ok and "phase peak" in why
+    assert s.smallest_admissible(bursty) is None  # same record every profile
+
+
+def test_admission_phase_peak_can_admit_below_steady():
+    """A serve session's working set (~half of training) fits slices the
+    training record OOMs on — phase-aware admission recovers them."""
+    db = full_db("a", step_s=0.01, peak_frac=1.6,
+                 fits_by_prof={p: False for p in _PROFILE_ORDER})
+    s = CollocationScheduler(db)
+    assert s.smallest_admissible(JobSpec("flat", "a", SUITE)) is None
+    sv = serve_workload("sv", "a", SUITE, slo_step_s=1e-3)  # peak mult 0.5
+    assert s.smallest_admissible(sv) == "1g.5gb"
+
+
+def test_shared_schedule_times_jobs_at_active_phase():
+    db = full_db("a", step_s=0.011, compute_s=0.01, memory_s=0.003,
+                 collective_s=0.001, peak_frac=0.1)
+    s = CollocationScheduler(db)
+    sv = serve_workload("sv", "a", SUITE, slo_step_s=1e-3)
+    steady = s.schedule([sv], mode=CollocationMode.MPS)
+    decode = s.schedule(
+        [sv], mode=CollocationMode.MPS, active_phases={"sv": DECODE_DEMAND}
+    )
+    # decode demand: compute x0.05, memory x0.6 -> far shorter steps
+    assert decode.assignments[0].predicted_step_s < (
+        0.5 * steady.assignments[0].predicted_step_s
+    )
+
+
+def test_solo_profile_scaled_by_demand():
+    p = SoloProfile("j", compute_s=1e-3, memory_s=4e-4, collective_s=1e-4,
+                    latency_s=1e-3, peak_bytes_per_device=100.0)
+    assert p.scaled(STEADY_DEMAND) is p
+    q = p.scaled(DECODE_DEMAND)
+    assert q.compute_s == pytest.approx(5e-5)
+    assert q.memory_s == pytest.approx(2.4e-4)
+    assert q.peak_bytes_per_device == pytest.approx(45.0)
+    assert q.latency_s == p.latency_s  # decode keeps the dispatch floor
+
+
+def test_mps_dispatch_queue_inflates_latency_dominated_neighbour():
+    """The MIGPerf mechanism: a saturating training neighbour stretches a
+    decode step through the dispatch queue even with no bandwidth resource
+    contended."""
+    from repro.core.sharing import mps_contention
+
+    trains = [
+        SoloProfile(f"train{i}", compute_s=1e-2, memory_s=3e-3,
+                    collective_s=1e-3)
+        for i in range(2)
+    ]
+    decode = SoloProfile("decode", compute_s=5e-5, memory_s=3e-4,
+                         collective_s=1e-5)
+    solo = mps_contention([decode]).effective_step_s["decode"]
+    contended = mps_contention([decode, *trains])
+    assert contended.contention["latency_s"] > 1.5
+    assert contended.effective_step_s["decode"] > 1.5 * solo
+    # sub-saturating pairs stay free: one decode + one decode
+    pair = mps_contention([decode, SoloProfile("d2", 5e-5, 3e-4, 1e-5)])
+    assert pair.contention["latency_s"] == 1.0
