@@ -4,8 +4,9 @@
     PYTHONPATH=src python -m benchmarks.report perf       # §Perf tagged cells
     PYTHONPATH=src python -m benchmarks.report collocate  # §Paper-claims
     PYTHONPATH=src python -m benchmarks.report modes      # naive vs MPS vs MIG
+    PYTHONPATH=src python -m benchmarks.report placement  # planner vs greedy
 
-All four sections render through the shared table renderer
+All sections render through the shared table renderer
 (benchmarks/common.py:format_table, markdown style).
 """
 from __future__ import annotations
@@ -178,7 +179,73 @@ def fmt_modes() -> str:
     return format_table(_MODES_COLUMNS, rows, style="markdown")
 
 
+_PLACEMENT_COLUMNS = (
+    Column("scenario"),
+    Column("greedy_goodput", "greedy goodput", fmt="{:.0f}"),
+    Column("planner_goodput", "planner goodput", fmt="{:.0f}"),
+    Column("delta", "Δ%"),
+    Column("greedy_qdelay", "greedy qdelay_s", fmt="{:.3f}"),
+    Column("planner_qdelay", "planner qdelay_s", fmt="{:.3f}"),
+    Column("replans"),
+    Column("optimality"),
+)
+
+
+def fmt_placement() -> str:
+    """Planner-vs-greedy placement table: same all-MIG hardware, same
+    trace; the deltas are pure placement-decision effects. ``replans``
+    counts the planner's committed re-partitions (each charged checkpoint
+    rollback + downtime); ``optimality`` summarizes the committed plans'
+    search tier (exact partition-tree search vs beam fallback).
+    """
+    from benchmarks.common import load_cluster
+    from repro.core.planner import enumerate_configs, maximal_configs
+    from repro.launch.simulate import summarize_cell
+
+    cells = load_cluster()
+    by = {}
+    for c in cells:
+        if c.get("status") != "OK":
+            continue
+        s = summarize_cell(c)
+        by[(s["scenario"], s["policy"])] = (s, c)
+    rows = []
+    for sc in sorted({k[0] for k in by}):
+        g = by.get((sc, "all-mig"))
+        p = by.get((sc, "planner"))
+        if not (g and p):
+            continue
+        gs, ps = g[0], p[0]
+        events = p[1]["report"]["migration_events"]
+        tiers = sorted(
+            {e["optimality"] for e in events if e.get("kind") == "replan"}
+        )
+        gg, pg = gs["goodput_steps_per_s"], ps["goodput_steps_per_s"]
+        rows.append(
+            {
+                "scenario": sc,
+                "greedy_goodput": gg,
+                "planner_goodput": pg,
+                "delta": f"{100.0 * (pg - gg) / gg:+.1f}" if gg else "—",
+                "greedy_qdelay": gs["mean_queueing_delay_s"],
+                "planner_qdelay": ps["mean_queueing_delay_s"],
+                "replans": ps["migrations"],
+                "optimality": "/".join(tiers) if tiers else "—",
+            }
+        )
+    if not rows:
+        return ("no greedy+planner cluster cells — run "
+                "repro.launch.simulate with the planner fleet first")
+    head = (
+        f"partition tree: {len(enumerate_configs())} valid layouts, "
+        f"{len(maximal_configs())} maximal configs (A100 canonical "
+        f"analogue); planner objective: jobs placed > kept in place > "
+        f"flexibility > compute thrift > goodput (docs/placement.md)"
+    )
+    return f"{head}\n\n{format_table(_PLACEMENT_COLUMNS, rows, style='markdown')}"
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
     print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate,
-           "modes": fmt_modes}[which]())
+           "modes": fmt_modes, "placement": fmt_placement}[which]())

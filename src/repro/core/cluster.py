@@ -313,21 +313,25 @@ class Cluster:
         char_db: Dict[CharKey, dict],
         devices: Sequence[Tuple[str, Union[CollocationMode, str]]],
         *,
-        policy: str = "static",  # "static" | "adaptive"
+        policy: str = "static",  # "static" | "adaptive" | "planner"
         reconfig_cost_s: float = DEFAULT_RECONFIG_COST_S,
         migration_cooldown_s: float = 5.0,
         migration_hysteresis: float = 0.10,
         migration_window: int = 8,
         scheduler_kwargs: Optional[Dict] = None,
     ):
-        if policy not in ("static", "adaptive"):
+        if policy not in ("static", "adaptive", "planner"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
         self.reconfig_cost_s = float(reconfig_cost_s)
         self.migration_cooldown_s = float(migration_cooldown_s)
         self.migration_hysteresis = float(migration_hysteresis)
         self.migration_window = int(migration_window)
-        kwargs = scheduler_kwargs or {}
+        kwargs = dict(scheduler_kwargs or {})
+        if policy == "planner":
+            # the planner policy's whole point: MIG placement decisions come
+            # from the partition-tree optimizer, not greedy first-fit
+            kwargs.setdefault("use_planner", True)
         self.devices: Dict[str, DeviceState] = {}
         for name, mode in devices:
             mode = CollocationMode(mode)
@@ -589,13 +593,7 @@ class Cluster:
             if not sched.assignments:
                 return False
             self._accrue_busy(dev, t)
-            a = sched.assignments[0]
-            dev.assignments[cj.name] = a
-            dev.running[cj.name] = cj
-            cj.device = dev.name
-            cj.step_s = a.predicted_step_s
-            cj.last_update_s = t
-            self._schedule_next_event(dev, cj, t)
+            self._bind(dev, cj, sched.assignments[0], t)
             return True
         # shared device (naive / MPS): re-admit the whole set so the mode's
         # contention model re-times everyone; the candidate is admitted only
@@ -622,6 +620,18 @@ class Cluster:
             dev.assignments[a.job.name] = a
             self._schedule_next_event(dev, j, t)
         return True
+
+    def _bind(self, dev: DeviceState, cj: ClusterJob, a: Assignment, t: float) -> None:
+        """Bind a job to its MIG instance and schedule its next lifecycle
+        event from ``t`` — the one binding invariant, shared by the
+        dispatch path and the replan commit (which binds at the *end* of
+        the reconfiguration window)."""
+        dev.assignments[cj.name] = a
+        dev.running[cj.name] = cj
+        cj.device = dev.name
+        cj.step_s = a.predicted_step_s
+        cj.last_update_s = t
+        self._schedule_next_event(dev, cj, t)
 
     def _retime_shared(self, dev: DeviceState, t: float) -> None:
         """Re-run the contention model after a departure or a neighbour's
@@ -664,8 +674,15 @@ class Cluster:
         step rate. Events fire at every phase boundary, so a segment never
         straddles two phases — the whole delta belongs to the span that was
         active at the segment's start, which is what the serve-SLO ledger
-        scores latency-sensitive (decode) steps against."""
+        scores latency-sensitive (decode) steps against.
+
+        A job bound during a re-partition has ``last_update_s`` in the
+        *future* (it starts stepping only when the device re-opens); a
+        neighbour's event firing inside that window must not rewind it —
+        progress never runs backwards, and the downtime stays unscored."""
         for j in dev.running.values():
+            if t <= j.last_update_s:
+                continue  # not yet stepping (bound inside a reconfig window)
             if j.step_s > 0:
                 span = j.current_span()  # span at segment start
                 delta = min(
@@ -735,6 +752,9 @@ class Cluster:
     # -- mode migration ---------------------------------------------------------
 
     def _maybe_migrate(self, t: float) -> None:
+        if self.policy == "planner":
+            self._maybe_replan(t)
+            return
         if self.policy != "adaptive":
             return
         for dev in self.devices.values():
@@ -819,6 +839,166 @@ class Cluster:
             }
         )
         self.events.push(t + self.reconfig_cost_s, EventKind.RECONFIG_DONE, (dev.name,))
+
+    # -- plan-driven re-partitions (planner policy) -----------------------------------
+
+    def _maybe_replan(self, t: float) -> None:
+        """Planner policy: when queued jobs cannot be placed incrementally,
+        ask the partition-tree optimizer for a *from-scratch* plan over the
+        running + queued mix (``preferred`` pins the running jobs' current
+        instances, so eviction is a last resort) and commit it only when
+
+          * it serves strictly more jobs than the device currently runs, and
+          * the re-partition pays for itself before the device would free
+            capacity naturally: downtime plus the slowest displaced job's
+            redone work must undercut the earliest pending completion —
+            re-partitioning a device that is about to drain anyway only
+            buys back queueing delay the completion would erase for free.
+
+        Committing is a re-partition: every running job whose planned
+        instance differs from its live one is displaced through the
+        standard checkpoint-rollback path, the device pays
+        ``reconfig_cost_s`` downtime before the re-planned placements
+        start stepping, and the event is recorded next to mode migrations
+        (kind="replan"). Survivors whose instances the plan keeps run
+        through the reconfiguration untouched — MIG instance create/destroy
+        does not disturb neighbouring instances (F3)."""
+        if not self.queue:
+            return
+        for dev in self.devices.values():
+            if not self.queue:
+                return  # drained by a replan committed on an earlier device
+            if dev.mode != CollocationMode.MIG or not dev.available(t):
+                continue
+            if dev.running and t - dev.last_migration_s < self.migration_cooldown_s:
+                continue
+            # recomputed per device on purpose: a committed replan above
+            # removed its placed jobs from the queue
+            queued = [
+                e.item
+                for e in self.queue.ordered()[: self.migration_window]
+            ]
+            specs = [j.spec for j in dev.running.values()] + [
+                j.spec for j in queued
+            ]
+            # bring progress up to ``t`` first: the pays-off check below
+            # compares rollback work and time-to-relief, and both are
+            # computed from steps_done — stale values (no event since
+            # placement) would understate the redo and overstate the
+            # relief, approving replans whose real cost exceeds the bar
+            self._accrue_busy(dev, t)
+            self._update_progress(dev, t)
+            active = {j.name: j.active_demand() for j in dev.running.values()}
+            preferred = {
+                name: a.placement for name, a in dev.assignments.items()
+            }
+            snapshot = dict(dev.scheduler._predicted)
+            trial = dev.scheduler.schedule(
+                specs,
+                blocked_units=frozenset(dev.failed_units),
+                mode=CollocationMode.MIG,
+                active_phases=active,
+                preferred=preferred,
+            )
+            dev.scheduler._predicted = snapshot
+            if len(trial.assignments) <= len(dev.running):
+                continue  # a re-partition must serve strictly more jobs
+            placed_names = {a.job.name for a in trial.assignments}
+            if any(name not in placed_names for name in dev.running):
+                # re-partitions may shuffle running jobs to open holes, but
+                # never evict one to the queue: pushing a job's completion
+                # out lengthens the trace's critical path for a gain the
+                # next natural completion would have delivered anyway
+                continue
+            if not self._replan_pays_off(dev, trial, t):
+                continue
+            self._commit_replan(dev, trial, t)
+
+    def _replan_pays_off(self, dev: DeviceState, trial, t: float) -> bool:
+        """Downtime + the slowest displaced job's redone work must finish
+        before the device's earliest pending completion frees capacity."""
+        if not dev.running:
+            return True
+        planned = {a.job.name: a.placement for a in trial.assignments}
+        planned_step = {a.job.name: a.predicted_step_s for a in trial.assignments}
+        relief_s = min(
+            (
+                cj.remaining_steps * cj.step_s
+                for cj in dev.running.values()
+                if cj.step_s > 0
+            ),
+            default=float("inf"),
+        )
+        redo_s = 0.0
+        for name, cj in dev.running.items():
+            if planned.get(name) == dev.assignments[name].placement:
+                continue  # kept in place: no rollback
+            cadence = cj.steps_per_epoch * CHECKPOINT_EVERY_EPOCHS
+            lost = cj.steps_done - math.floor(cj.steps_done / cadence) * cadence
+            # the lost steps are redone at the *planned* slice's rate,
+            # which may be slower than the one the job is moved off
+            step = max(cj.step_s, planned_step.get(name, cj.step_s))
+            redo_s = max(redo_s, lost * step)
+        return self.reconfig_cost_s + redo_s < relief_s
+
+    def _commit_replan(self, dev: DeviceState, trial, t: float) -> None:
+        planned = {a.job.name: a.placement for a in trial.assignments}
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        kept, displaced = [], []
+        for name in list(dev.running):
+            if planned.get(name) == dev.assignments[name].placement:
+                planned.pop(name)  # survivor: instance untouched
+                kept.append(name)
+                continue
+            cj = dev.running[name]
+            bumped = dataclasses.replace(
+                cj.spec, priority=cj.spec.priority + REQUEUE_PRIORITY_BUMP
+            )
+            self._displace(dev, name, t, new_spec=bumped, count_migration=True)
+            displaced.append(name)
+        # the device is down while it re-partitions; planned jobs are bound
+        # to their instances now but only start stepping once it re-opens.
+        # Score the downtime window's utilization at the *kept* occupancy
+        # (survivors run through it; the new instances sit idle until the
+        # device re-opens — same convention as the adaptive migrate path,
+        # whose emptied device scores the window at zero).
+        t_eff = t + self.reconfig_cost_s
+        dev.busy_integral_s += self._busy_fraction(dev) * (t_eff - t)
+        dev.last_busy_update_s = t_eff
+        placed = []
+        for name, pl in planned.items():
+            if name not in self.queue:
+                continue  # displaced by the plan but left unplaced by it
+            cj = self.jobs[name]
+            self.queue.remove(name)
+            step = dev.scheduler.predict_step(
+                cj.spec, pl.profile, cj.active_demand()
+            )
+            self._bind(dev, cj, Assignment(cj.spec, pl, step), t_eff)
+            if cj.started_s is None:
+                cj.started_s = t_eff
+            placed.append(name)
+        dev.reconfiguring_until = t_eff
+        dev.migrations += 1
+        dev.reconfig_cost_s += self.reconfig_cost_s
+        dev.last_migration_s = t
+        self.migration_events.append(
+            {
+                "t_s": t,
+                "device": dev.name,
+                "from": dev.mode.value,
+                "to": dev.mode.value,
+                "kind": "replan",
+                "kept": sorted(kept),
+                "requeued": displaced,
+                "placed": sorted(placed),
+                "optimality": trial.plan.optimality if trial.plan else None,
+                "gap": trial.plan.gap if trial.plan else None,
+                "reconfig_cost_s": self.reconfig_cost_s,
+            }
+        )
+        self.events.push(t_eff, EventKind.RECONFIG_DONE, (dev.name,))
 
     # -- straggler mitigation (EMA -> live repack) -----------------------------------
 

@@ -17,7 +17,11 @@ The MIG path implements:
     F5: medium/large OOM on 1g.5gb as a scheduler rejection, not a crash);
   * packing — smallest admissible profile first (maximizes instances per
     pod, which is the paper's throughput lever), widened to bigger
-    profiles only when the small slots are exhausted;
+    profiles only when the small slots are exhausted; with
+    ``use_planner=True`` the (profile, start) choice comes instead from
+    exact/beam search over the whole partition tree (core/planner), which
+    keeps the larger profiles' few legal starts unfragmented — greedy
+    first-fit's known blind spot (docs/placement.md);
   * layout search — candidate layouts come from the paper-faithful
     placement tree (core/profiles.py), scored by predicted aggregate
     throughput from the characterization DB;
@@ -42,6 +46,8 @@ import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.instance import JobSpec, compute_discount
+from repro.core.planner import PlacementPlan, PlanningCostModel, plan_placements
+from repro.core.planner.costmodel import record_fits
 from repro.core.profiles import (
     N_UNITS,
     PROFILES,
@@ -89,6 +95,7 @@ class Schedule:
     rejections: List[Rejection]
     mode: CollocationMode = CollocationMode.MIG
     shared_report: Optional[SharedModeReport] = None  # NAIVE/MPS only
+    plan: Optional[PlacementPlan] = None  # planned MIG path only
 
     @property
     def placements(self) -> List[Placement]:
@@ -132,10 +139,29 @@ _FULL_PROFILE = "7g.40gb"
 MODE_PREFERENCE = (CollocationMode.MPS, CollocationMode.MIG, CollocationMode.NAIVE)
 _MODE_PREFERENCE = MODE_PREFERENCE  # backwards-compat alias
 
+# Import-time guard: a new CollocationMode member MUST take an explicit
+# position in MODE_PREFERENCE — a silent fallback would change every
+# tie-broken verdict in the repo without a single test naming the cause.
+_UNRANKED = [m for m in CollocationMode if m not in MODE_PREFERENCE]
+assert not _UNRANKED and len(MODE_PREFERENCE) == len(CollocationMode), (
+    f"MODE_PREFERENCE must rank every CollocationMode exactly once; "
+    f"unranked: {[m.value for m in _UNRANKED]}, "
+    f"preference: {[m.value for m in MODE_PREFERENCE]}"
+)
+del _UNRANKED
+
+# Explicit tie-break rank (0 = most preferred). KeyError here is impossible
+# while the assert above holds.
+_PREFERENCE_RANK: Dict[CollocationMode, int] = {
+    m: i for i, m in enumerate(MODE_PREFERENCE)
+}
+
 
 def rank_modes(schedules: Dict[CollocationMode, Schedule]) -> CollocationMode:
     """Winner under the lexicographic ranking ``best_mode`` documents:
-    (jobs placed, aggregate throughput), ties broken by MODE_PREFERENCE.
+    (jobs placed, aggregate throughput), exact ties broken by the explicit
+    ``_PREFERENCE_RANK`` position (MPS > MIG > naive — covered for every
+    mode by the import-time assert above).
 
     Shared with the cluster's migration policy (core/cluster.py), which
     evaluates candidate schedules without committing the scheduler's
@@ -146,7 +172,7 @@ def rank_modes(schedules: Dict[CollocationMode, Schedule]) -> CollocationMode:
         key=lambda m: (
             len(schedules[m].assignments),
             schedules[m].throughput(),
-            -MODE_PREFERENCE.index(m),
+            -_PREFERENCE_RANK[m],
         ),
     )
 
@@ -164,6 +190,7 @@ class CollocationScheduler:
         straggler_tol: float = 1.5,
         ema_alpha: float = 0.25,
         mode: CollocationMode = CollocationMode.MIG,
+        use_planner: bool = False,
     ):
         self.char_db = char_db
         self.chips_per_unit = chips_per_unit
@@ -171,8 +198,27 @@ class CollocationScheduler:
         self.straggler_tol = straggler_tol
         self.ema_alpha = ema_alpha
         self.mode = CollocationMode(mode)
+        # route MIG placement through the partition-tree optimizer
+        # (core/planner) instead of greedy smallest-admissible first-fit
+        self.use_planner = bool(use_planner)
+        self._cost_model: Optional[PlanningCostModel] = None
         self._ema: Dict[str, float] = {}
         self._predicted: Dict[str, float] = {}
+        # memoized lookups: the char DB is immutable for the scheduler's
+        # lifetime, so (arch, shape, profile, phase) step predictions and
+        # per-arch solo profiles are computed once — the planner's inner
+        # loop and the cluster's shared-device re-timing on every
+        # arrival/departure hit these paths thousands of times
+        # key: (arch, shape, profile, demand, phase-peak multiplier)
+        self._step_cache: Dict[Tuple, float] = {}
+        self._solo_cache: Dict[Tuple[str, str], Optional[SoloProfile]] = {}
+
+    @property
+    def cost_model(self) -> PlanningCostModel:
+        """Lazily built predictive cost model over the same char DB."""
+        if self._cost_model is None:
+            self._cost_model = PlanningCostModel(self.char_db)
+        return self._cost_model
 
     # -- admission ------------------------------------------------------------
 
@@ -191,10 +237,9 @@ class CollocationScheduler:
         if rec is None:
             return False, f"no characterization for {(job.arch, job.suite.name, profile)}"
         mult = peak_demand_multiplier(job)
-        if mult == 1.0:
-            fits = rec.get("fits", False)
-        else:
-            fits = rec.get("peak_bytes_per_device", 0.0) * mult <= HBM_PER_CHIP
+        # the one shared admission predicate — the planner cost model must
+        # reach the same verdict on the same record (core/planner/costmodel)
+        fits = record_fits(rec, mult)
         if not fits:
             need = rec["peak_bytes_per_device"] * mult / 2**30
             have = HBM_PER_CHIP / 2**30
@@ -225,6 +270,7 @@ class CollocationScheduler:
         mode: Optional[CollocationMode] = None,
         existing: Sequence[Placement] = (),
         active_phases: Optional[Mapping[str, DemandTrace]] = None,
+        preferred: Optional[Mapping[str, Placement]] = None,
     ) -> Schedule:
         """Place ``jobs`` under ``mode`` (defaults to the scheduler's own).
 
@@ -245,11 +291,25 @@ class CollocationScheduler:
         the active-phase vectors of the whole co-resident set. Memory
         admission always uses phase-peak regardless. Jobs absent from the
         map are timed at their steady (identity) demand — the flat-JobSpec
-        behaviour."""
+        behaviour.
+
+        ``preferred`` (planner path only) maps job names to the instances
+        they currently hold: a re-partition plan treats keeping them in
+        place as the objective right after serving the most jobs, since
+        every move costs a checkpoint rollback (core/planner/optimizer.py).
+        """
         mode = CollocationMode(mode if mode is not None else self.mode)
         active_phases = active_phases or {}
         if mode != CollocationMode.MIG:
             return self._schedule_shared(jobs, mode, active_phases)
+        if self.use_planner:
+            return self._schedule_mig_planned(
+                jobs,
+                blocked_units=blocked_units,
+                existing=existing,
+                active_phases=active_phases,
+                preferred=preferred,
+            )
         # (the MIG overhead slice is a *compute* budget — enforced by
         # validate_layout's 7-slice check — not a blocked memory unit)
         free = [True] * N_UNITS
@@ -310,13 +370,78 @@ class CollocationScheduler:
                 rejections.append(Rejection(job, "no free placement slot"))
         return Schedule(assignments, rejections, mode=CollocationMode.MIG)
 
+    def _schedule_mig_planned(
+        self,
+        jobs: Sequence[JobSpec],
+        *,
+        blocked_units: frozenset = frozenset(),
+        existing: Sequence[Placement] = (),
+        active_phases: Mapping[str, DemandTrace] = {},
+        preferred: Optional[Mapping[str, Placement]] = None,
+    ) -> Schedule:
+        """MIG placement via the partition-tree optimizer (core/planner).
+
+        Same contract as the greedy path — every job is either assigned or
+        rejected, ``existing`` placements are fixed and jointly validated,
+        ``blocked_units`` are untouchable — but the (profile, start) choice
+        comes from exact/beam search over the whole placement tree instead
+        of smallest-admissible first-fit, and the returned ``Schedule``
+        carries the ``PlacementPlan`` (optimality + gap included)."""
+        plan = plan_placements(
+            list(jobs),
+            self.cost_model,
+            existing=existing,
+            blocked_units=frozenset(blocked_units),
+            active_phases=active_phases,
+            preferred=preferred,
+            partitioned=self.partitioned,
+        )
+        by_name = {j.name: j for j in jobs}
+        assignments: List[Assignment] = []
+        for job in sorted(jobs, key=lambda j: -j.priority):
+            pl = plan.assignments.get(job.name)
+            if pl is None:
+                continue
+            demand = active_phases.get(job.name, STEADY_DEMAND)
+            assignments.append(
+                Assignment(job, pl, self.predict_step(job, pl.profile, demand))
+            )
+        rejections = [
+            Rejection(by_name[name], reason) for name, reason in plan.unplaced
+        ]
+        return Schedule(
+            assignments, rejections, mode=CollocationMode.MIG, plan=plan
+        )
+
     def predict_step(self, job, profile: str, demand: DemandTrace = STEADY_DEMAND) -> float:
         """Predicted per-step time of ``job`` on a MIG ``profile`` under a
         phase's demand vector, recorded for straggler detection. The one
         source of truth for MIG step prediction — the scheduler's packing
-        path and the cluster's phase-transition re-timing both call it."""
-        rec = self.char_db[(job.arch, job.suite.name, profile)]
-        step = float(phase_step_s(rec, demand))
+        path and the cluster's phase-transition re-timing both call it.
+
+        Memoized on (arch, shape, profile, demand, phase-peak multiplier):
+        the char DB is immutable, so identical lookups (the planner inner
+        loop, shared re-timing storms) stop recomputing the phase algebra.
+        A profile with no record of its own falls back to the planner cost
+        model's MISO-style prediction from the full-device record — whose
+        fits/KeyError verdict depends on the job's phase-peak working set,
+        hence the multiplier in the key."""
+        key = (job.arch, job.suite.name, profile, demand,
+               peak_demand_multiplier(job))
+        step = self._step_cache.get(key)
+        if step is None:
+            rec = self.char_db.get((job.arch, job.suite.name, profile))
+            if rec is None:
+                est = self.cost_model.estimate(job, profile, demand)
+                if not est.fits or est.step_s <= 0:
+                    # keep the old loud-failure contract: a step prediction
+                    # for an uncharacterized, unpredictable slice is a bug
+                    # in the caller, not a 0.0
+                    raise KeyError((job.arch, job.suite.name, profile))
+                step = float(est.step_s)
+            else:
+                step = float(phase_step_s(rec, demand))
+            self._step_cache[key] = step
         self._predicted[job.name] = step
         return step
 
@@ -326,13 +451,26 @@ class CollocationScheduler:
         """The job's solo roofline profile on the full, non-partitioned
         device, from the characterization DB. Shared modes run with MIG
         disabled, so the F6 reserved-slice discount baked into the 7g record
-        is removed."""
-        rec = self.char_db.get((job.arch, job.suite.name, _FULL_PROFILE))
-        if rec is None:
+        is removed.
+
+        Memoized per (arch, shape) — only the profile's ``name`` is
+        job-specific, so the cached arch profile is re-labelled per job
+        instead of re-deriving the roofline terms on every arrival,
+        departure, and re-timing."""
+        key = (job.arch, job.suite.name)
+        if key not in self._solo_cache:
+            rec = self.char_db.get((job.arch, job.suite.name, _FULL_PROFILE))
+            self._solo_cache[key] = (
+                None
+                if rec is None
+                else SoloProfile.from_record(
+                    job.arch, rec, undiscount_compute=compute_discount(_FULL_PROFILE)
+                )
+            )
+        base = self._solo_cache[key]
+        if base is None:
             return None
-        return SoloProfile.from_record(
-            job.name, rec, undiscount_compute=compute_discount(_FULL_PROFILE)
-        )
+        return dataclasses.replace(base, name=job.name)
 
     def _schedule_shared(
         self,

@@ -1,0 +1,206 @@
+"""Partition-tree enumerator: every valid MIG reconfiguration profile.
+
+The A100 exposes ~19 canonical partition configs; under our paper-faithful
+algebra (five profiles, fixed start offsets, the 4g+3g exclusion, and the
+7-slice compute budget of core/profiles.py) the same search yields 18
+*maximal* configs out of 296 valid non-empty layouts — small enough that the
+placement optimizer can afford exact search over all of them.
+
+Canonical form: a layout is a set of placements; its canonical form is the
+tuple sorted by (start, profile). Enumeration is memoized (the placement
+tree is a process-wide constant) and deterministic: the same call always
+returns the same tuple, in the same order, with no duplicates —
+tests/test_planner.py pins all three properties plus the partitioner
+invariants (disjoint spans == ``verify_disjoint``, compute budget <= 7).
+
+Incremental transitions: ``expansions(existing)`` returns every valid config
+reachable from a live layout by only *creating* instances (running jobs keep
+their placements — MIG instance creation does not disturb neighbours, the
+F3 isolation the cluster's incremental admission relies on). A full
+re-partition (destroying instances) is a plan the cluster must charge
+checkpoint-rollback + downtime for; ``transition`` reports exactly which
+instances such a plan keeps, destroys, and creates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, FrozenSet, List, Sequence, Tuple
+
+from repro.core.profiles import PROFILES, Placement, validate_layout
+
+Config = Tuple[Placement, ...]
+
+
+def canonical_form(placements: Sequence[Placement]) -> Config:
+    """Order-insensitive canonical form: sorted by (start, profile)."""
+    return tuple(sorted(placements, key=lambda pl: (pl.start, pl.profile)))
+
+
+def _all_options() -> Tuple[Placement, ...]:
+    return tuple(
+        Placement(name, s) for name, p in PROFILES.items() for s in p.starts
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def enumerate_configs(partitioned: bool = True) -> Tuple[Config, ...]:
+    """All valid non-empty layouts of the placement tree, canonicalized,
+    deterministically ordered (by size, then lexicographically), memoized."""
+    options = _all_options()
+    seen: Dict[Tuple, Config] = {}
+
+    def rec(chosen: List[Placement], rest: Tuple[Placement, ...]) -> None:
+        for i, cand in enumerate(rest):
+            trial = chosen + [cand]
+            ok, _ = validate_layout(trial, partitioned=partitioned)
+            if not ok:
+                continue
+            cfg = canonical_form(trial)
+            key = tuple((pl.start, pl.profile) for pl in cfg)
+            if key not in seen:
+                seen[key] = cfg
+            rec(trial, rest[i + 1 :])
+
+    rec([], options)
+    return tuple(
+        sorted(
+            seen.values(),
+            key=lambda cfg: (
+                len(cfg),
+                tuple((pl.start, pl.profile) for pl in cfg),
+            ),
+        )
+    )
+
+
+def _units(pl: Placement) -> FrozenSet[int]:
+    s0, s1 = pl.span
+    return frozenset(range(s0, s1))
+
+
+@functools.lru_cache(maxsize=None)
+def maximal_configs(partitioned: bool = True) -> Tuple[Config, ...]:
+    """Configs to which no further instance can be added — the analogue of
+    the A100's canonical partition profiles (18 under our algebra)."""
+    options = _all_options()
+    out = []
+    for cfg in enumerate_configs(partitioned):
+        have = set(cfg)
+        addable = any(
+            validate_layout(list(cfg) + [o], partitioned=partitioned)[0]
+            for o in options
+            if o not in have
+        )
+        if not addable:
+            out.append(cfg)
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=None)
+def profile_multisets(partitioned: bool = True) -> Tuple[Tuple[str, ...], ...]:
+    """Distinct profile combinations over all valid layouts (start-blind)."""
+    return tuple(
+        sorted({tuple(sorted(pl.profile for pl in cfg)) for cfg in enumerate_configs(partitioned)})
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _expansions_cached(
+    existing: Config, blocked_units: FrozenSet[int], partitioned: bool
+) -> Tuple[Config, ...]:
+    have = set(existing)
+    out = []
+    for cfg in enumerate_configs(partitioned):
+        if not have <= set(cfg):
+            continue
+        new = [pl for pl in cfg if pl not in have]
+        if any(_units(pl) & blocked_units for pl in new):
+            continue
+        out.append(cfg)
+    if not existing:
+        # the empty layout itself is a legal (trivial) target
+        out.insert(0, ())
+    else:
+        out.insert(0, existing)
+    return tuple(dict.fromkeys(out))
+
+
+def expansions(
+    existing: Sequence[Placement] = (),
+    *,
+    blocked_units: FrozenSet[int] = frozenset(),
+    partitioned: bool = True,
+) -> Tuple[Config, ...]:
+    """Every valid config reachable from ``existing`` by only creating
+    instances (supersets of the live layout), with no new instance touching
+    a blocked (failed) slice unit. Includes ``existing`` itself (the
+    zero-transition plan). ``existing`` must already be a valid layout."""
+    cfg = canonical_form(existing)
+    if cfg:
+        ok, why = validate_layout(cfg, partitioned=partitioned)
+        if not ok:
+            raise ValueError(f"existing layout invalid: {why}")
+    return _expansions_cached(cfg, frozenset(blocked_units), partitioned)
+
+
+@functools.lru_cache(maxsize=None)
+def _free_cached(
+    existing: Config, blocked_units: FrozenSet[int], partitioned: bool
+) -> Tuple[Placement, ...]:
+    have = set(existing)
+    base = list(existing)
+    out = []
+    for cand in _all_options():
+        if cand in have or _units(cand) & blocked_units:
+            continue
+        if validate_layout(base + [cand], partitioned=partitioned)[0]:
+            out.append(cand)
+    return tuple(out)
+
+
+def free_placements(
+    existing: Sequence[Placement] = (),
+    *,
+    blocked_units: FrozenSet[int] = frozenset(),
+    partitioned: bool = True,
+) -> Tuple[Placement, ...]:
+    """Placements individually addable to ``existing`` (one-step moves).
+    Memoized on the canonical form — the optimizer's innermost loop."""
+    return _free_cached(
+        canonical_form(existing), frozenset(blocked_units), partitioned
+    )
+
+
+def flexibility(
+    layout: Sequence[Placement] = (),
+    *,
+    blocked_units: FrozenSet[int] = frozenset(),
+    partitioned: bool = True,
+) -> int:
+    """How much future capacity a layout preserves: the number of distinct
+    placements still addable to it. The optimizer uses this as its final
+    tie-break, which is what steers 1g jobs away from the start offsets
+    whose occupation strands the larger profiles' few legal starts — the
+    fragmentation greedy first-fit walks straight into."""
+    return len(
+        free_placements(
+            layout, blocked_units=blocked_units, partitioned=partitioned
+        )
+    )
+
+
+def transition(
+    current: Sequence[Placement], target: Sequence[Placement]
+) -> Tuple[Config, Config, Config]:
+    """(kept, destroyed, created) instance sets of a re-partition plan.
+
+    ``destroyed`` is what the cluster must charge for: each destroyed
+    instance's job rolls back to its last checkpoint and the device pays
+    reconfiguration downtime (core/cluster.py). ``kept`` instances run
+    through the reconfiguration untouched (F3 isolation)."""
+    cur, tgt = set(current), set(target)
+    return (
+        canonical_form(cur & tgt),
+        canonical_form(cur - tgt),
+        canonical_form(tgt - cur),
+    )

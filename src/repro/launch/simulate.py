@@ -29,11 +29,19 @@ differences are pure policy effects:
                      isolated slices protect decode latency that MPS's
                      shared dispatch queue sacrifices to the saturating
                      training neighbours.
+    fragmentation    a 1g-job stream followed by 2g-class jobs whose only
+                     legal starts greedy first-fit has already blocked —
+                     the placement-tree fragmentation the planner fleet
+                     avoids (docs/placement.md).
 
   policies
     all-mig / all-mps / all-naive   homogeneous static fleets;
     best                            best-mode-per-device with live
-                                    reconfiguration (adaptive policy).
+                                    reconfiguration (adaptive policy);
+    planner                         all-MIG hardware, placements chosen by
+                                    the partition-tree optimizer
+                                    (core/planner) with plan-driven
+                                    re-partitions charged like migrations.
 
 The characterization DB is synthesized analytically from per-arch roofline
 terms (busy seconds, replicated + sharded working-set fractions) over the
@@ -87,10 +95,15 @@ SIM_SAMPLES_PER_EPOCH = 3200
 #            only admit ~4 before aggregate HBM runs out;
 #   medium   fits nothing below 3g.20gb;
 #   large    full-device only (7g.40gb), saturating.
+#   twog     too big for 1g.5gb, fits from 2g.10gb up — but 2g's only legal
+#            starts are units {0, 2, 4}, so greedy first-fit 1g packing
+#            strands it while the planner's flexibility tie-break keeps a
+#            legal start open (the fragmentation scenario's pivot class).
 SIM_WORKLOADS: Dict[str, Dict] = {
     "resnet_small": {"cls": "tiny", "busy_s": 1.0e-4, "repl": 0.05, "shard": 0.005},
     "whisper-base": {"cls": "tiny", "busy_s": 1.5e-4, "repl": 0.06, "shard": 0.005},
     "granite-3-2b": {"cls": "aligned", "busy_s": 1.0e-4, "repl": 0.20, "shard": 0.005},
+    "stablelm-12b": {"cls": "twog", "busy_s": 8.0e-4, "repl": 0.30, "shard": 0.10},
     "resnet_medium": {"cls": "medium", "busy_s": 4.0e-3, "repl": 0.22, "shard": 0.22},
     "llama3-8b": {"cls": "medium", "busy_s": 5.0e-3, "repl": 0.24, "shard": 0.20},
     "resnet_large": {"cls": "large", "busy_s": 2.0e-2, "repl": 0.35, "shard": 0.35},
@@ -127,8 +140,24 @@ SERVE_SUITE = ShapeSuite("sim", 1024, 32, "decode")
 # collocation with saturating training neighbours misses it.
 SERVE_SLO_S = {"whisper-base": 1.4e-3, "granite-3-2b": 1.35e-3}
 
-SCENARIOS = ("aligned_static", "mixed_dynamic", "drift", "train_serve_mix")
-POLICIES = ("all-mig", "all-mps", "all-naive", "best")
+SCENARIO_HELP = {
+    "aligned_static": "partition-aligned batch at t=0 — the mix MIG is built for",
+    "mixed_dynamic": "Poisson arrivals over tiny/medium/large jobs (MIG rigidity)",
+    "drift": "aligned burst then tiny-job flood — exercises live migration",
+    "train_serve_mix": "phase-aware training + latency-SLO inference sessions",
+    "fragmentation": "1g stream then 2g-class jobs — greedy first-fit strands "
+                     "a slice the placement planner keeps open",
+}
+POLICY_HELP = {
+    "all-mig": "homogeneous MIG fleet, greedy first-fit placement",
+    "all-mps": "homogeneous MPS fleet (spatial sharing)",
+    "all-naive": "homogeneous naive time-slicing fleet",
+    "best": "best-mode-per-device with live reconfiguration (adaptive)",
+    "planner": "MIG fleet placed by the partition-tree optimizer "
+               "(core/planner), with plan-driven re-partitions",
+}
+SCENARIOS = tuple(SCENARIO_HELP)
+POLICIES = tuple(POLICY_HELP)
 
 
 def synthetic_char_db(
@@ -272,6 +301,29 @@ def train_serve_mix_trace(
     return trace
 
 
+def fragmentation_trace(
+    rng: random.Random, n_jobs: int, n_devices: int
+) -> List[TraceItem]:
+    """The planner's showcase: a stream of slice-sized 1g jobs followed by
+    2g-class jobs (stablelm-12b: OOMs on 1g.5gb, fits 2g.10gb). Greedy
+    first-fit packs the 1g jobs at the lowest start offsets, which blocks
+    all three of 2g's legal starts (units 0, 2, 4) while free units remain
+    — the 2g jobs strand until the 1g cohort drains. The planner's
+    flexibility tie-break parks the same 1g jobs on offsets that keep a 2g
+    start open, so the 2g jobs place on arrival."""
+    trace: List[TraceItem] = []
+    n_small = min(5 * n_devices, max(1, (n_jobs * 2) // 3))
+    for i in range(n_small):
+        trace.append(
+            (0.005 * i, JobSpec(f"fr-s{i}", "granite-3-2b", SIM_SUITE), 3)
+        )
+    t = 0.08
+    for i in range(max(0, n_jobs - n_small)):
+        t += rng.expovariate(1.0 / 0.03)
+        trace.append((t, JobSpec(f"fr-b{i}", "stablelm-12b", SIM_SUITE), 1))
+    return trace
+
+
 def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[TraceItem]:
     # fresh, scenario-salted RNG: identical trace for every policy
     rng = random.Random(f"{seed}:{scenario}")
@@ -283,6 +335,8 @@ def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[Tr
         return drift_trace(rng, n_jobs, n_devices)
     if scenario == "train_serve_mix":
         return train_serve_mix_trace(rng, n_jobs)
+    if scenario == "fragmentation":
+        return fragmentation_trace(rng, n_jobs, n_devices)
     raise ValueError(
         f"unknown scenario {scenario!r}; choose from: {', '.join(SCENARIOS)}"
     )
@@ -301,6 +355,10 @@ def make_fleet(policy: str, n_devices: int) -> Tuple[List[Tuple[str, Collocation
         # start from the paper's single-user recommendation (MPS) and let
         # per-device best_mode re-partition live as the mix drifts
         return [(f"d{i}", CollocationMode.MPS) for i in range(n_devices)], "adaptive"
+    if policy == "planner":
+        # same hardware as all-mig; only the placement decisions differ —
+        # the printed deltas against all-mig are pure planner effects
+        return [(f"d{i}", CollocationMode.MIG) for i in range(n_devices)], "planner"
     raise ValueError(
         f"unknown fleet policy {policy!r}; choose from: {', '.join(POLICIES)}"
     )
@@ -427,7 +485,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--db", default=None,
                     help="load the char DB from collocate.py artifacts "
                          "instead of the synthetic catalog")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered scenarios and fleet policies "
+                         "and exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        print("scenarios:")
+        for name, desc in SCENARIO_HELP.items():
+            print(f"  {name:<16} {desc}")
+        print("fleet policies:")
+        for name, desc in POLICY_HELP.items():
+            print(f"  {name:<16} {desc}")
+        return 0
 
     # fail fast with the registered choices listed — not a KeyError
     # traceback (or a silently FAILed artifact cell) deep in the run loop

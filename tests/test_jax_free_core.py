@@ -29,8 +29,15 @@ import repro.core.cluster
 import repro.core.sharing
 import repro.core.queueing
 import repro.core.events
+import repro.core.planner
+import repro.core.planner.enumerator
+import repro.core.planner.costmodel
+import repro.core.planner.optimizer
 
 from repro.core.workload import serve_workload, train_workload  # noqa: F401
+from repro.core.planner import enumerate_configs, plan_placements  # noqa: F401
+
+assert len(enumerate_configs()) == 296  # the partition tree, jax-free
 
 # and the trace-driven simulator actually runs, end to end
 from repro.launch.simulate import run_cell
@@ -38,6 +45,12 @@ from repro.launch.simulate import run_cell
 cell = run_cell("train_serve_mix", "all-mig", n_jobs=8, n_devices=2)
 assert cell["status"] == "OK", cell
 assert cell["report"]["completed"] + cell["report"]["rejected"] == cell["n_jobs"]
+
+# the planner fleet + fragmentation scenario run jax-free too (the whole
+# decision layer, optimizer included)
+cell = run_cell("fragmentation", "planner", n_jobs=10, n_devices=2)
+assert cell["status"] == "OK", cell
+assert cell["report"]["still_queued"] == 0, cell
 print("jax-free-ok")
 """
 

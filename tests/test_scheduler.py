@@ -107,6 +107,18 @@ def test_schedules_are_always_valid_layouts(job_descs):
         assert s.admissible(a.job, a.profile)[0]
 
 
+def test_mode_preference_covers_every_mode_at_import_time():
+    """The hardening satellite: MODE_PREFERENCE must rank every
+    CollocationMode exactly once (asserted at import time in
+    core/collocation.py, mirrored here so the contract is test-visible) —
+    adding a mode can't silently change tie-broken verdicts."""
+    from repro.core.collocation import _PREFERENCE_RANK
+
+    assert set(MODE_PREFERENCE) == set(CollocationMode)
+    assert len(MODE_PREFERENCE) == len(CollocationMode)
+    assert _PREFERENCE_RANK == {m: i for i, m in enumerate(MODE_PREFERENCE)}
+
+
 def test_best_mode_tie_breaks_by_mode_preference():
     """Exact (jobs placed, throughput) ties fall back to the paper's
     recommendation order: MPS > MIG > naive."""

@@ -37,3 +37,18 @@ def test_make_trace_and_make_fleet_raise_value_error_with_choices():
         simulate.make_trace("nope", 0, 10, 2)
     with pytest.raises(ValueError, match="all-mig.*best"):
         simulate.make_fleet("nope", 2)
+
+
+def test_list_prints_every_scenario_and_fleet_and_exits_zero(capsys):
+    """--list complements the unknown-name error path: the registry is
+    printable without running anything."""
+    assert simulate.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in simulate.SCENARIOS:
+        assert name in out
+    for name in simulate.POLICIES:
+        assert name in out
+    assert "scenarios:" in out and "fleet policies:" in out
+    # helps stay in sync: every registered name has a help line
+    assert set(simulate.SCENARIO_HELP) == set(simulate.SCENARIOS)
+    assert set(simulate.POLICY_HELP) == set(simulate.POLICIES)
