@@ -28,7 +28,13 @@ prints verdict lines tying the numbers back to the paper:
     partition-tree optimizer in core/planner) strictly out-goodputs the
     greedy all-MIG fleet — greedy's lowest-offset 1g packing blocks every
     legal 2g start while free units remain — and on every other scenario
-    the planner is never worse (docs/placement.md).
+    the planner is never worse (docs/placement.md);
+  * the hardware axis matters: on the hetero_sku trace a mixed-generation
+    fleet (a100-40gb + a100-80gb + a30-24gb, core/device.py) drains the
+    whole cross-generation mix — the big-memory serve sessions that OOM
+    on every 40GB/24GB slice complete on the 80GB generation's tree with
+    zero rejections (benchmarks/report.py devices prints the per-SKU
+    verdict table).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.cluster_sim
@@ -129,6 +135,24 @@ def verdicts(rows: List[Dict]) -> List[str]:
         out.append("[FAIL] no mode-migration events under the best policy")
     out.extend(mixed_workload_verdicts(rows))
     out.extend(planner_verdicts(rows))
+    out.extend(hetero_sku_verdicts(rows))
+    return out
+
+
+def hetero_sku_verdicts(rows: List[Dict]) -> List[str]:
+    """Does the mixed-generation fleet drain a mix no single 40GB/24GB
+    device could? (The device-model API's acceptance check.)"""
+    out = []
+    h = _by(rows, "hetero_sku", "all-mig")
+    if h:
+        ok = h["completed"] == h["n_jobs"] and h["rejected"] == 0
+        out.append(
+            f"[{'OK' if ok else 'FAIL'}] hetero-SKU fleet drains the "
+            f"cross-generation mix (hetero_sku, all-mig): "
+            f"{h['completed']}/{h['n_jobs']} completed, "
+            f"{h['rejected']} rejected — the big-memory serve sessions "
+            f"fit only the 80GB generation's full slice"
+        )
     return out
 
 

@@ -5,6 +5,7 @@
     PYTHONPATH=src python -m benchmarks.report collocate  # §Paper-claims
     PYTHONPATH=src python -m benchmarks.report modes      # naive vs MPS vs MIG
     PYTHONPATH=src python -m benchmarks.report placement  # planner vs greedy
+    PYTHONPATH=src python -m benchmarks.report devices    # cross-SKU verdicts
 
 All sections render through the shared table renderer
 (benchmarks/common.py:format_table, markdown style).
@@ -245,7 +246,88 @@ def fmt_placement() -> str:
     return f"{head}\n\n{format_table(_PLACEMENT_COLUMNS, rows, style='markdown')}"
 
 
+_DEVICES_COLUMNS = (
+    Column("sku"),
+    Column("tree", "units x GiB/slice"),
+    Column("layouts"),
+    Column("maximal"),
+    Column("mig", "mig placed"),
+    Column("mps", "mps placed"),
+    Column("naive", "naive placed"),
+    Column("best", "best mode"),
+    Column("best_tput", "best steps/s", fmt="{:.0f}"),
+)
+
+
+def fmt_devices() -> str:
+    """Cross-SKU verdict table: one canonical job mix, every registered
+    device generation — the ROADMAP's "how do the collocation verdicts
+    shift across GPU generations" question as a table.
+
+    The mix is slice-aligned 1g jobs + 2g-class jobs + one medium trainer
+    + one big-memory serve session (the hetero_sku pivot class). Per SKU
+    it reports the partition-tree size (valid layouts / maximal configs —
+    the canonical-config analogue) and ``best_mode``'s scorecard: jobs
+    placed under each mode and the winning mode's aggregate throughput.
+    Everything is computed in-process from the analytic characterization
+    (milliseconds, deterministic — no artifacts needed).
+    """
+    from repro.core.collocation import CollocationScheduler
+    from repro.core.device import SKUS, format_gib
+    from repro.core.instance import JobSpec
+    from repro.core.planner import enumerate_configs, maximal_configs
+    from repro.core.sharing import CollocationMode
+    from repro.core.workload import serve_workload
+    from repro.launch.simulate import (
+        SERVE_SLO_S,
+        SERVE_SUITE,
+        SIM_SUITE,
+        synthetic_char_db,
+    )
+
+    def mix():
+        jobs = [JobSpec(f"al{i}", "granite-3-2b", SIM_SUITE) for i in range(4)]
+        jobs += [JobSpec(f"tg{i}", "stablelm-12b", SIM_SUITE) for i in range(2)]
+        jobs.append(JobSpec("md0", "llama3-8b", SIM_SUITE))
+        jobs.append(
+            serve_workload(
+                "xl0", "qwen2-72b", SERVE_SUITE,
+                slo_step_s=SERVE_SLO_S["qwen2-72b"], prefill_steps=4,
+            )
+        )
+        return jobs
+
+    rows = []
+    for name, dev in SKUS.items():
+        sched = CollocationScheduler(synthetic_char_db(sku=dev), sku=dev)
+        decision = sched.best_mode(mix())
+        scores = decision.scores()
+        winner = decision.mode
+        rows.append(
+            {
+                "sku": name + (" (default)" if name == "a100-40gb" else ""),
+                "tree": f"{dev.n_units} x {format_gib(dev.slice_bytes)}"
+                        f" ({dev.n_compute_slices}c)",
+                "layouts": len(enumerate_configs(sku=dev)),
+                "maximal": len(maximal_configs(sku=dev)),
+                "mig": scores[CollocationMode.MIG][0],
+                "mps": scores[CollocationMode.MPS][0],
+                "naive": scores[CollocationMode.NAIVE][0],
+                "best": winner.value,
+                "best_tput": scores[winner][1],
+            }
+        )
+    head = (
+        "same job mix (4x slice-aligned, 2x 2g-class, 1x medium train, "
+        "1x big-memory serve) scored on every registered SKU "
+        "(core/device.py); 'placed' counts jobs each mode admits — the "
+        "hardware generation, not just the mode, decides the verdict"
+    )
+    return f"{head}\n\n{format_table(_DEVICES_COLUMNS, rows, style='markdown')}"
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
     print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate,
-           "modes": fmt_modes, "placement": fmt_placement}[which]())
+           "modes": fmt_modes, "placement": fmt_placement,
+           "devices": fmt_devices}[which]())

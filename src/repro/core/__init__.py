@@ -2,6 +2,20 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 
+# Device-model API: first-class GPU SKU descriptors (placement tree,
+# slice budgets, shared-mode knobs) + the registry of generations. The
+# module-global A100 constants in core/profiles.py are aliases of
+# DEFAULT_SKU — kept as deprecation shims.
+from repro.core.device import (  # noqa: F401
+    DEFAULT_SKU,
+    SKUS,
+    DeviceSKU,
+    InstanceProfile,
+    Placement,
+    format_gib,
+    get_sku,
+)
+
 # Public mode API (kept dependency-light: nothing here pulls in jax).
 from repro.core.sharing import (  # noqa: F401
     CollocationMode,

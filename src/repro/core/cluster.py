@@ -9,9 +9,11 @@ decisions age as the mix drifts. This module is that state machine.
 
 A ``Cluster`` owns N ``DeviceState``s — a heterogeneous fleet where each
 device has its own ``CollocationMode`` (some MIG-partitioned, others
-MPS/naive-shared) and its own ``CollocationScheduler`` instance holding the
-per-device placement and straggler state. The cluster is driven by a
-discrete-event loop (core/events.py):
+MPS/naive-shared), its own ``DeviceSKU`` (core/device.py — a fleet may mix
+GPU generations, each with its own placement tree and slice budgets), and
+its own ``CollocationScheduler`` instance holding the per-device placement
+and straggler state. The cluster is driven by a discrete-event loop
+(core/events.py):
 
   submit(job, arrival_s)  pushes an ARRIVAL; at fire time the job enters
                           the priority + backfill admission queue
@@ -84,20 +86,24 @@ from repro.core.collocation import (
     CharKey,
     CollocationScheduler,
     Schedule,
+    is_sku_keyed_db,
     rank_modes,
 )
+from repro.core.device import DEFAULT_SKU, DeviceSKU, get_sku
+from repro.core.device import DEFAULT_RECONFIG_COST_S as _BASE_RECONFIG_COST_S
 from repro.core.elastic import REQUEUE_PRIORITY_BUMP, split_by_failure
 from repro.core.events import Event, EventKind, EventQueue
 from repro.core.instance import JobSpec
-from repro.core.profiles import N_UNITS, PROFILES
 from repro.core.queueing import AdmissionQueue
 from repro.core.sharing import CollocationMode, device_busy_fraction
 from repro.core.workload import PhaseSpan, Workload, as_workload, span_at
 
 # Live re-partitioning penalty: drain + MIG instance destroy/create + MPS
 # daemon restart + checkpoint restore of the displaced jobs. Charged per
-# migration on top of the per-job epoch rollback.
-DEFAULT_RECONFIG_COST_S = 2.0
+# migration on top of the per-job epoch rollback. Aliases the device
+# model's baseline (core/device.py) so the two cannot drift; per-device
+# SKUs scale it (Cluster._device_reconfig_cost).
+DEFAULT_RECONFIG_COST_S = _BASE_RECONFIG_COST_S
 
 # Checkpoint cadence the rollback models: train.py saves one manifest per
 # epoch, and checkpoint/store.py makes a checkpoint visible only once its
@@ -213,11 +219,12 @@ class ClusterJob:
 
 @dataclasses.dataclass
 class DeviceState:
-    """One device of the fleet: its mode, scheduler, and live placements."""
+    """One device of the fleet: its SKU, mode, scheduler, live placements."""
 
     name: str
     mode: CollocationMode
     scheduler: CollocationScheduler
+    sku: DeviceSKU = DEFAULT_SKU
     running: Dict[str, ClusterJob] = dataclasses.field(default_factory=dict)
     assignments: Dict[str, Assignment] = dataclasses.field(default_factory=dict)
     failed_units: Set[int] = dataclasses.field(default_factory=set)
@@ -237,15 +244,11 @@ class DeviceState:
     def occupied_units(self) -> Set[int]:
         occ = set(self.failed_units)
         for a in self.assignments.values():
-            if a.profile == "7g.40gb":
-                occ |= set(range(N_UNITS))
-            else:
-                s0, s1 = a.placement.span
-                occ |= set(range(s0, s1))
+            occ |= self.sku.units(a.placement)
         return occ
 
     def to_row(self) -> Dict:
-        return {
+        row = {
             "name": self.name,
             "mode": self.mode.value,
             "mode_history": list(self.mode_history),
@@ -254,6 +257,13 @@ class DeviceState:
             "straggler_repacks": self.straggler_repacks,
             "failed_units": sorted(self.failed_units),
         }
+        # schema extension only where the hardware axis is exercised: rows
+        # for the default SKU stay byte-identical to the pre-device-model
+        # artifacts (the a100-40gb compatibility contract) — by name, the
+        # same rule launch/simulate.py applies to its cells
+        if self.sku.name != DEFAULT_SKU.name:
+            row["sku"] = self.sku.name
+        return row
 
 
 @dataclasses.dataclass
@@ -310,8 +320,11 @@ class Cluster:
 
     def __init__(
         self,
-        char_db: Dict[CharKey, dict],
-        devices: Sequence[Tuple[str, Union[CollocationMode, str]]],
+        char_db: Union[Dict[CharKey, dict], Dict[str, Dict[CharKey, dict]]],
+        devices: Sequence[Union[
+            Tuple[str, Union[CollocationMode, str]],
+            Tuple[str, Union[CollocationMode, str], Union[str, DeviceSKU]],
+        ]],
         *,
         policy: str = "static",  # "static" | "adaptive" | "planner"
         reconfig_cost_s: float = DEFAULT_RECONFIG_COST_S,
@@ -320,6 +333,11 @@ class Cluster:
         migration_window: int = 8,
         scheduler_kwargs: Optional[Dict] = None,
     ):
+        """``devices`` entries are ``(name, mode)`` — the default SKU — or
+        ``(name, mode, sku)`` for a heterogeneous-generation fleet
+        (core/device.py). ``char_db`` is a flat characterization DB shared
+        by every device, or — since a char DB speaks one SKU's profile
+        names — a ``{sku_name: db}`` mapping for mixed fleets."""
         if policy not in ("static", "adaptive", "planner"):
             raise ValueError(f"unknown policy {policy!r}")
         self.policy = policy
@@ -332,13 +350,25 @@ class Cluster:
             # the planner policy's whole point: MIG placement decisions come
             # from the partition-tree optimizer, not greedy first-fit
             kwargs.setdefault("use_planner", True)
+        per_sku_db = is_sku_keyed_db(char_db)
         self.devices: Dict[str, DeviceState] = {}
-        for name, mode in devices:
-            mode = CollocationMode(mode)
+        for spec in devices:
+            name, mode = spec[0], CollocationMode(spec[1])
+            sku = get_sku(spec[2] if len(spec) > 2 else None)
+            if per_sku_db:
+                db = char_db.get(sku.name)
+                if db is None:
+                    raise KeyError(
+                        f"char_db has no entry for SKU {sku.name!r} "
+                        f"(device {name!r}); has: {', '.join(char_db)}"
+                    )
+            else:
+                db = char_db
             self.devices[name] = DeviceState(
                 name=name,
                 mode=mode,
-                scheduler=CollocationScheduler(char_db, mode=mode, **kwargs),
+                sku=sku,
+                scheduler=CollocationScheduler(db, mode=mode, sku=sku, **kwargs),
             )
         if not self.devices:
             raise ValueError("a cluster needs at least one device")
@@ -501,7 +531,7 @@ class Cluster:
         dev.failed_units |= set(units)
         if dev.mode == CollocationMode.MIG:
             killed_specs, survivors = split_by_failure(
-                list(dev.assignments.values()), dev.failed_units
+                list(dev.assignments.values()), dev.failed_units, dev.sku
             )
             survivor_names = {a.job.name for a in survivors}
         else:
@@ -542,21 +572,30 @@ class Cluster:
         """A job is rejected outright only if no device could run it even
         empty, under any mode the policy allows — everything else waits.
 
-        Every device shares one char DB, so an empty-device trial depends
-        only on the mode: dedupe to one trial per reachable mode instead
-        of one per (device, mode)."""
-        if self.policy == "adaptive":
-            modes = tuple(CollocationMode)
-        else:
-            modes = tuple(dict.fromkeys(d.mode for d in self.devices.values()))
-        scheduler = next(iter(self.devices.values())).scheduler
+        An empty-device trial depends only on the device's (SKU, mode) —
+        same char DB and placement tree — so dedupe to one trial per
+        reachable (SKU, mode) pair instead of one per device: the first
+        device of each SKU stands in for its generation. A mixed fleet is
+        the point: a big-memory job unplaceable on every 40GB tree waits
+        for (or lands on) the 80GB devices instead of being rejected."""
+        reps: Dict[str, CollocationScheduler] = {}
+        sku_modes: Dict[str, Tuple[CollocationMode, ...]] = {}
+        for d in self.devices.values():
+            if d.sku.name not in reps:
+                reps[d.sku.name] = d.scheduler
+                sku_modes[d.sku.name] = ()
+            if self.policy == "adaptive":
+                sku_modes[d.sku.name] = tuple(CollocationMode)
+            elif d.mode not in sku_modes[d.sku.name]:
+                sku_modes[d.sku.name] += (d.mode,)
         last_reason = "no devices"
-        for m in modes:
-            trial = scheduler.schedule([spec], mode=m)
-            if trial.assignments:
-                return None
-            if trial.rejections:
-                last_reason = trial.rejections[0].reason
+        for sku_name, scheduler in reps.items():
+            for m in sku_modes[sku_name]:
+                trial = scheduler.schedule([spec], mode=m)
+                if trial.assignments:
+                    return None
+                if trial.rejections:
+                    last_reason = trial.rejections[0].reason
         return f"unplaceable on any empty device: {last_reason}"
 
     def _dispatch(self, t: float) -> None:
@@ -703,9 +742,10 @@ class Cluster:
             # unit-weighted occupancy — the device-level GRACT aggregation
             # of core/metrics.py with active instances counted as busy
             occupied = sum(
-                PROFILES[a.profile].mem_units for a in dev.assignments.values()
+                dev.sku.profile(a.profile).mem_units
+                for a in dev.assignments.values()
             )
-            return min(1.0, occupied / N_UNITS)
+            return min(1.0, occupied / dev.sku.n_units)
         profiles = []
         for j in dev.running.values():
             p = dev.scheduler.solo_profile(j.spec)
@@ -720,6 +760,18 @@ class Cluster:
         if dt > 0:
             dev.busy_integral_s += self._busy_fraction(dev) * dt
             dev.last_busy_update_s = t
+
+    # -- per-device costs --------------------------------------------------------
+
+    def _device_reconfig_cost(self, dev: DeviceState) -> float:
+        """Downtime charged when ``dev`` re-partitions: the cluster's
+        configured cost scaled by the SKU's reconfig cost relative to the
+        baseline — so the operator's --reconfig-cost flag and the device
+        generation's knob (an H100 re-partitions faster) compose. Exactly
+        the configured cost on baseline-cost SKUs (ratio 1.0)."""
+        return self.reconfig_cost_s * (
+            dev.sku.reconfig_cost_s / _BASE_RECONFIG_COST_S
+        )
 
     # -- displacement (failure / migration / straggler repack) ----------------------
 
@@ -815,6 +867,7 @@ class Cluster:
     def _migrate(self, dev: DeviceState, new_mode: CollocationMode, t: float) -> None:
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
+        cost = self._device_reconfig_cost(dev)
         requeued = []
         for name in list(dev.running):
             cj = dev.running[name]
@@ -824,9 +877,9 @@ class Cluster:
             self._displace(dev, name, t, new_spec=bumped, count_migration=True)
             requeued.append(name)
         dev.pending_mode = new_mode
-        dev.reconfiguring_until = t + self.reconfig_cost_s
+        dev.reconfiguring_until = t + cost
         dev.migrations += 1
-        dev.reconfig_cost_s += self.reconfig_cost_s
+        dev.reconfig_cost_s += cost
         dev.last_migration_s = t
         self.migration_events.append(
             {
@@ -835,10 +888,10 @@ class Cluster:
                 "from": dev.mode.value,
                 "to": new_mode.value,
                 "requeued": requeued,
-                "reconfig_cost_s": self.reconfig_cost_s,
+                "reconfig_cost_s": cost,
             }
         )
-        self.events.push(t + self.reconfig_cost_s, EventKind.RECONFIG_DONE, (dev.name,))
+        self.events.push(t + cost, EventKind.RECONFIG_DONE, (dev.name,))
 
     # -- plan-driven re-partitions (planner policy) -----------------------------------
 
@@ -919,6 +972,7 @@ class Cluster:
         before the device's earliest pending completion frees capacity."""
         if not dev.running:
             return True
+        cost = self._device_reconfig_cost(dev)
         planned = {a.job.name: a.placement for a in trial.assignments}
         planned_step = {a.job.name: a.predicted_step_s for a in trial.assignments}
         relief_s = min(
@@ -939,10 +993,11 @@ class Cluster:
             # which may be slower than the one the job is moved off
             step = max(cj.step_s, planned_step.get(name, cj.step_s))
             redo_s = max(redo_s, lost * step)
-        return self.reconfig_cost_s + redo_s < relief_s
+        return cost + redo_s < relief_s
 
     def _commit_replan(self, dev: DeviceState, trial, t: float) -> None:
         planned = {a.job.name: a.placement for a in trial.assignments}
+        cost = self._device_reconfig_cost(dev)
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
         kept, displaced = [], []
@@ -963,7 +1018,7 @@ class Cluster:
         # (survivors run through it; the new instances sit idle until the
         # device re-opens — same convention as the adaptive migrate path,
         # whose emptied device scores the window at zero).
-        t_eff = t + self.reconfig_cost_s
+        t_eff = t + cost
         dev.busy_integral_s += self._busy_fraction(dev) * (t_eff - t)
         dev.last_busy_update_s = t_eff
         placed = []
@@ -981,7 +1036,7 @@ class Cluster:
             placed.append(name)
         dev.reconfiguring_until = t_eff
         dev.migrations += 1
-        dev.reconfig_cost_s += self.reconfig_cost_s
+        dev.reconfig_cost_s += cost
         dev.last_migration_s = t
         self.migration_events.append(
             {
@@ -995,7 +1050,7 @@ class Cluster:
                 "placed": sorted(placed),
                 "optimality": trial.plan.optimality if trial.plan else None,
                 "gap": trial.plan.gap if trial.plan else None,
-                "reconfig_cost_s": self.reconfig_cost_s,
+                "reconfig_cost_s": cost,
             }
         )
         self.events.push(t_eff, EventKind.RECONFIG_DONE, (dev.name,))

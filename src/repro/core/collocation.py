@@ -43,18 +43,13 @@ to steady — which reproduces the flat-JobSpec numbers exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
-from repro.core.instance import JobSpec, compute_discount
+from repro.core.device import DEFAULT_SKU, DeviceSKU, format_gib, get_sku
+from repro.core.instance import JobSpec
 from repro.core.planner import PlacementPlan, PlanningCostModel, plan_placements
 from repro.core.planner.costmodel import record_fits
-from repro.core.profiles import (
-    N_UNITS,
-    PROFILES,
-    Placement,
-    homogeneous_layout,
-    validate_layout,
-)
+from repro.core.profiles import Placement, homogeneous_layout
 from repro.core.sharing import (
     CollocationMode,
     SharedModeReport,
@@ -67,9 +62,17 @@ from repro.core.workload import (
     peak_demand_multiplier,
     phase_step_s,
 )
-from repro.telemetry.constants import HBM_PER_CHIP
 
 CharKey = Tuple[str, str, str]  # (arch, shape, profile)
+
+
+def is_sku_keyed_db(char_db) -> bool:
+    """True when ``char_db`` is the mixed-fleet shape ``{sku_name: db}``
+    rather than one flat ``{CharKey: record}`` DB — a char DB speaks one
+    SKU's profile names, so heterogeneous fleets carry one DB per
+    generation. The single shape test shared by ``Cluster`` and
+    ``launch/simulate.py``."""
+    return bool(char_db) and all(isinstance(k, str) for k in char_db)
 
 
 @dataclasses.dataclass
@@ -127,12 +130,14 @@ class ModeDecision:
         }
 
 
-# profile order: smallest first — the paper's throughput-maximizing choice
-_PROFILE_ORDER = ("1g.5gb", "2g.10gb", "3g.20gb", "4g.20gb", "7g.40gb")
+# profile order: smallest first — the paper's throughput-maximizing choice.
+# Default-SKU shims: the scheduler itself reads ``self.sku.profile_order`` /
+# ``self.sku.full_profile`` so other device generations get their own.
+_PROFILE_ORDER = DEFAULT_SKU.profile_order
 
 
 # Full-device profile the shared modes (naive / MPS) run on.
-_FULL_PROFILE = "7g.40gb"
+_FULL_PROFILE = DEFAULT_SKU.full_profile
 
 # Preference when modes tie on (jobs placed, aggregate throughput): the
 # paper recommends MPS as the most flexible, MIG next, naive last.
@@ -191,8 +196,13 @@ class CollocationScheduler:
         ema_alpha: float = 0.25,
         mode: CollocationMode = CollocationMode.MIG,
         use_planner: bool = False,
+        sku: Union[None, str, DeviceSKU] = None,
     ):
         self.char_db = char_db
+        # the device generation this scheduler places onto (core/device.py):
+        # its placement tree, slice budgets, and shared-mode knobs. The
+        # char DB must speak this SKU's profile names.
+        self.sku = get_sku(sku)
         self.chips_per_unit = chips_per_unit
         self.partitioned = partitioned
         self.straggler_tol = straggler_tol
@@ -211,13 +221,13 @@ class CollocationScheduler:
         # arrival/departure hit these paths thousands of times
         # key: (arch, shape, profile, demand, phase-peak multiplier)
         self._step_cache: Dict[Tuple, float] = {}
-        self._solo_cache: Dict[Tuple[str, str], Optional[SoloProfile]] = {}
+        self._solo_cache: Dict[Tuple[str, str, str], Optional[SoloProfile]] = {}
 
     @property
     def cost_model(self) -> PlanningCostModel:
         """Lazily built predictive cost model over the same char DB."""
         if self._cost_model is None:
-            self._cost_model = PlanningCostModel(self.char_db)
+            self._cost_model = PlanningCostModel(self.char_db, sku=self.sku)
         return self._cost_model
 
     # -- admission ------------------------------------------------------------
@@ -239,22 +249,26 @@ class CollocationScheduler:
         mult = peak_demand_multiplier(job)
         # the one shared admission predicate — the planner cost model must
         # reach the same verdict on the same record (core/planner/costmodel)
-        fits = record_fits(rec, mult)
+        fits = record_fits(rec, mult, budget_bytes=self.sku.slice_bytes)
         if not fits:
-            need = rec["peak_bytes_per_device"] * mult / 2**30
-            have = HBM_PER_CHIP / 2**30
             return False, (
-                f"OOM: needs {need:.1f} GiB/chip (phase peak) "
-                f"> {have:.1f} GiB HBM on {profile}"
+                f"OOM: needs "
+                f"{format_gib(rec['peak_bytes_per_device'] * mult)} GiB/chip "
+                f"(phase peak) > {format_gib(self.sku.slice_bytes)} GiB HBM "
+                f"on {profile}"
             )
         return True, ""
 
     def smallest_admissible(self, job: JobSpec) -> Optional[str]:
+        order = self.sku.profile_order
         start = 0
-        if job.min_profile is not None:
-            # straggler-repack floor: never place below this profile again
-            start = _PROFILE_ORDER.index(job.min_profile)
-        for prof in _PROFILE_ORDER[start:]:
+        if job.min_profile is not None and job.min_profile in order:
+            # straggler-repack floor: never place below this profile again.
+            # A floor naming another generation's profile (a repack victim
+            # retried on a different SKU in a mixed fleet) does not bind —
+            # slice names, like slice budgets, are per-SKU.
+            start = order.index(job.min_profile)
+        for prof in order[start:]:
             ok, _ = self.admissible(job, prof)
             if ok:
                 return prof
@@ -311,30 +325,26 @@ class CollocationScheduler:
                 preferred=preferred,
             )
         # (the MIG overhead slice is a *compute* budget — enforced by
-        # validate_layout's 7-slice check — not a blocked memory unit)
-        free = [True] * N_UNITS
+        # validate_layout's slice-count check — not a blocked memory unit;
+        # the full-device profile owns all units by the SKU invariant)
+        sku = self.sku
+        order = sku.profile_order
+        free = [True] * sku.n_units
         for u in blocked_units:
             free[u] = False
         existing = list(existing)
         for pl in existing:
-            span = (
-                range(0, N_UNITS)
-                if pl.profile == "7g.40gb"
-                else range(pl.start, pl.start + PROFILES[pl.profile].mem_units)
-            )
-            for u in span:
+            for u in sku.units(pl):
                 free[u] = False
         assignments: List[Assignment] = []
         rejections: List[Rejection] = []
 
         def try_place(profile: str) -> Optional[Placement]:
-            p = PROFILES[profile]
+            p = sku.profile(profile)
             for s in p.starts:
                 span = range(s, s + p.mem_units)
-                if profile == "7g.40gb":
-                    span = range(0, N_UNITS)  # full-device profile owns all
                 if all(free[u] for u in span):
-                    ok, _ = validate_layout(
+                    ok, _ = sku.validate_layout(
                         existing
                         + [Placement(a.profile, a.placement.start) for a in assignments]
                         + [Placement(profile, s)],
@@ -351,11 +361,11 @@ class CollocationScheduler:
             start_prof = self.smallest_admissible(job)
             if start_prof is None:
                 reasons = [
-                    f"{p}: {self.admissible(job, p)[1]}" for p in _PROFILE_ORDER
+                    f"{p}: {self.admissible(job, p)[1]}" for p in order
                 ]
                 rejections.append(Rejection(job, "; ".join(reasons[:2])))
                 continue
-            for prof in _PROFILE_ORDER[_PROFILE_ORDER.index(start_prof):]:
+            for prof in order[order.index(start_prof):]:
                 ok, _ = self.admissible(job, prof)
                 if not ok:
                     continue
@@ -419,14 +429,16 @@ class CollocationScheduler:
         source of truth for MIG step prediction — the scheduler's packing
         path and the cluster's phase-transition re-timing both call it.
 
-        Memoized on (arch, shape, profile, demand, phase-peak multiplier):
-        the char DB is immutable, so identical lookups (the planner inner
-        loop, shared re-timing storms) stop recomputing the phase algebra.
-        A profile with no record of its own falls back to the planner cost
-        model's MISO-style prediction from the full-device record — whose
-        fits/KeyError verdict depends on the job's phase-peak working set,
-        hence the multiplier in the key."""
-        key = (job.arch, job.suite.name, profile, demand,
+        Memoized on (SKU, arch, shape, profile, demand, phase-peak
+        multiplier): the char DB is immutable, so identical lookups (the
+        planner inner loop, shared re-timing storms) stop recomputing the
+        phase algebra — and the SKU in the key means a scheduler re-homed
+        onto another generation can never serve a stale step time
+        (tests/test_device.py). A profile with no record of its own falls
+        back to the planner cost model's MISO-style prediction from the
+        full-device record — whose fits/KeyError verdict depends on the
+        job's phase-peak working set, hence the multiplier in the key."""
+        key = (self.sku.name, job.arch, job.suite.name, profile, demand,
                peak_demand_multiplier(job))
         step = self._step_cache.get(key)
         if step is None:
@@ -453,18 +465,22 @@ class CollocationScheduler:
         disabled, so the F6 reserved-slice discount baked into the 7g record
         is removed.
 
-        Memoized per (arch, shape) — only the profile's ``name`` is
+        Memoized per (SKU, arch, shape) — only the profile's ``name`` is
         job-specific, so the cached arch profile is re-labelled per job
         instead of re-deriving the roofline terms on every arrival,
         departure, and re-timing."""
-        key = (job.arch, job.suite.name)
+        full = self.sku.full_profile
+        key = (self.sku.name, job.arch, job.suite.name)
         if key not in self._solo_cache:
-            rec = self.char_db.get((job.arch, job.suite.name, _FULL_PROFILE))
+            rec = self.char_db.get((job.arch, job.suite.name, full))
             self._solo_cache[key] = (
                 None
                 if rec is None
                 else SoloProfile.from_record(
-                    job.arch, rec, undiscount_compute=compute_discount(_FULL_PROFILE)
+                    job.arch,
+                    rec,
+                    undiscount_compute=self.sku.compute_discount(full),
+                    latency_s=self.sku.step_latency_s,
                 )
             )
         base = self._solo_cache[key]
@@ -493,7 +509,8 @@ class CollocationScheduler:
         assignments: List[Assignment] = []
         rejections: List[Rejection] = []
         admitted: List[Tuple[JobSpec, SoloProfile]] = []
-        budget = HBM_PER_CHIP
+        full = self.sku.full_profile
+        budget = self.sku.slice_bytes
         used = 0.0
         for job in sorted(jobs, key=lambda j: -j.priority):
             prof = self.solo_profile(job)
@@ -502,14 +519,14 @@ class CollocationScheduler:
                     Rejection(
                         job,
                         f"no characterization for "
-                        f"{(job.arch, job.suite.name, _FULL_PROFILE)}",
+                        f"{(job.arch, job.suite.name, full)}",
                     )
                 )
                 continue
             peak_mult = peak_demand_multiplier(job)
             peak_bytes = prof.peak_bytes_per_device * peak_mult
             solo_fits = (
-                self.char_db[(job.arch, job.suite.name, _FULL_PROFILE)].get("fits", False)
+                self.char_db[(job.arch, job.suite.name, full)].get("fits", False)
                 if peak_mult == 1.0
                 else peak_bytes <= budget
             )
@@ -523,8 +540,8 @@ class CollocationScheduler:
                     Rejection(
                         job,
                         f"OOM under {mode.value}: aggregate phase-peak "
-                        f"footprint {(used + peak_bytes) / 2**30:.1f} GiB "
-                        f"> {budget / 2**30:.1f} GiB shared HBM",
+                        f"footprint {format_gib(used + peak_bytes)} GiB "
+                        f"> {format_gib(budget)} GiB shared HBM",
                     )
                 )
                 continue
@@ -536,11 +553,14 @@ class CollocationScheduler:
         report = None
         if admitted:
             report = shared_mode_report(
-                mode, [p for _, p in admitted], hbm_budget_bytes=budget
+                mode,
+                [p for _, p in admitted],
+                hbm_budget_bytes=budget,
+                switch_overhead_frac=self.sku.naive_switch_overhead_frac,
             )
             for job, prof in admitted:
                 step = report.effective_step_s[prof.name]
-                a = Assignment(job, Placement(_FULL_PROFILE, 0), float(step))
+                a = Assignment(job, Placement(full, 0), float(step))
                 assignments.append(a)
                 self._predicted[job.name] = a.predicted_step_s
         return Schedule(assignments, rejections, mode=mode, shared_report=report)
@@ -588,29 +608,33 @@ class CollocationScheduler:
     def repack_plan(self, schedule: Schedule) -> Dict[str, str]:
         """job -> larger-profile suggestion for flagged stragglers."""
         plan = {}
+        order = self.sku.profile_order
         straggling = set(self.stragglers())
         for a in schedule.assignments:
             if a.job.name not in straggling:
                 continue
-            bigger = _PROFILE_ORDER[
-                min(_PROFILE_ORDER.index(a.profile) + 1, len(_PROFILE_ORDER) - 1)
-            ]
+            bigger = order[min(order.index(a.profile) + 1, len(order) - 1)]
             ok, _ = self.admissible(a.job, bigger)
             if ok and bigger != a.profile:
                 plan[a.job.name] = bigger
         return plan
 
 
-def paper_experiment_grid(workloads: Sequence[str], suite) -> List[Tuple[str, str, List[Placement]]]:
+def paper_experiment_grid(
+    workloads: Sequence[str], suite, sku: Union[None, str, DeviceSKU] = None
+) -> List[Tuple[str, str, List[Placement]]]:
     """The paper's §3.4 run matrix: for each profile x workload, an isolated
     ('one') run and a max-instances homogeneous ('parallel') run, plus the
     non-MIG full-device baseline."""
+    dev = get_sku(sku)
     grid: List[Tuple[str, str, List[Placement]]] = []
     for w in workloads:
-        for prof in _PROFILE_ORDER:
-            grid.append((w, f"{prof} one", [Placement(prof, PROFILES[prof].starts[0])]))
-            par = homogeneous_layout(prof)
+        for prof in dev.profile_order:
+            grid.append(
+                (w, f"{prof} one", [Placement(prof, dev.profile(prof).starts[0])])
+            )
+            par = homogeneous_layout(prof, sku=dev)
             if len(par) > 1:
                 grid.append((w, f"{prof} parallel", par))
-        grid.append((w, "non-MIG", [Placement("7g.40gb", 0)]))
+        grid.append((w, "non-MIG", [Placement(dev.full_profile, 0)]))
     return grid

@@ -23,8 +23,9 @@ import dataclasses
 from typing import Dict, List, Sequence, Set, Tuple
 
 from repro.core.collocation import Assignment, CollocationScheduler, Schedule
+from repro.core.device import get_sku
 from repro.core.instance import JobSpec
-from repro.core.profiles import N_UNITS, Placement
+from repro.core.profiles import Placement
 from repro.core.sharing import CollocationMode
 
 # priority bump applied to killed jobs so they reclaim capacity first when
@@ -32,16 +33,14 @@ from repro.core.sharing import CollocationMode
 REQUEUE_PRIORITY_BUMP = 10
 
 
-def span_units(pl: Placement) -> Set[int]:
-    """Slice units an instance placement occupies (7g owns the full device)."""
-    if pl.profile == "7g.40gb":
-        return set(range(N_UNITS))
-    s0, s1 = pl.span
-    return set(range(s0, s1))
+def span_units(pl: Placement, sku=None) -> Set[int]:
+    """Slice units an instance placement occupies on ``sku`` (the full
+    profile owns every unit by the SKU invariant; default A100-40GB)."""
+    return set(get_sku(sku).units(pl))
 
 
 def split_by_failure(
-    assignments: Sequence[Assignment], failed: Set[int]
+    assignments: Sequence[Assignment], failed: Set[int], sku=None
 ) -> Tuple[List[JobSpec], List[Assignment]]:
     """Partition assignments into (killed job specs, surviving assignments).
 
@@ -53,7 +52,7 @@ def split_by_failure(
     killed: List[JobSpec] = []
     survivors: List[Assignment] = []
     for a in assignments:
-        if span_units(a.placement) & failed:
+        if span_units(a.placement, sku) & failed:
             killed.append(
                 dataclasses.replace(a.job, priority=a.job.priority + REQUEUE_PRIORITY_BUMP)
             )
@@ -85,7 +84,7 @@ class ElasticController:
         self.failed.difference_update(units)
 
     def _span_units(self, pl: Placement) -> Set[int]:
-        return span_units(pl)
+        return span_units(pl, self.scheduler.sku)
 
     def repack(self, schedule: Schedule) -> RepackEvent:
         """Kill intersecting instances, re-pack their jobs onto survivors.
@@ -107,13 +106,15 @@ class ElasticController:
                 resumed_from_checkpoint=(),
             )
 
-        killed, survivors = split_by_failure(schedule.assignments, self.failed)
+        killed, survivors = split_by_failure(
+            schedule.assignments, self.failed, self.scheduler.sku
+        )
 
         # re-pack ONLY the killed jobs into the remaining free units: the
         # scheduler sees survivors' units + failed units as occupied.
         occupied = set(self.failed)
         for a in survivors:
-            occupied |= span_units(a.placement)
+            occupied |= span_units(a.placement, self.scheduler.sku)
         partial = self.scheduler.schedule(
             killed, blocked_units=frozenset(occupied), mode=CollocationMode.MIG
         )

@@ -24,7 +24,6 @@ import dataclasses
 from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 from repro.configs.base import ShapeSuite
-from repro.core.profiles import PROFILES
 from repro.telemetry import constants as C
 from repro.telemetry import roofline as rl
 from repro.telemetry.hlo import collective_summary, hlo_flops_bytes
@@ -34,11 +33,14 @@ if TYPE_CHECKING:  # jax/mesh machinery only needed by InstanceRuntime —
     from repro.core.partitioner import InstanceMesh
 
 
-def compute_discount(profile: str, *, partitioned: bool = True) -> float:
-    if not partitioned:
-        return 1.0  # non-MIG: the full device, no reserved slice
-    p = PROFILES[profile]
-    return min(1.0, p.compute_slices / p.mem_units)
+def compute_discount(
+    profile: str, *, partitioned: bool = True, sku=None
+) -> float:
+    """F6 analytically — delegates to the device model (core/device.py);
+    ``sku=None`` keeps the old A100-40GB module-global behaviour."""
+    from repro.core.device import get_sku
+
+    return get_sku(sku).compute_discount(profile, partitioned=partitioned)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,11 +95,20 @@ class InstanceRuntime:
     def __init__(
         self,
         inst: InstanceMesh,
-        hbm_per_chip: int = C.HBM_PER_CHIP,
+        hbm_per_chip: Optional[int] = None,
         *,
         partitioned: bool = True,
+        sku=None,
     ):
+        from repro.core.device import get_sku
+
         self.inst = inst
+        # the generation whose tree/budgets price this instance
+        # (core/device.py); the default SKU's slice_bytes IS the old
+        # HBM_PER_CHIP default, so existing callers are unchanged
+        self.sku = get_sku(sku)
+        if hbm_per_chip is None:
+            hbm_per_chip = self.sku.slice_bytes
         self.hbm_budget = inst.n_chips * hbm_per_chip
         self.partitioned = partitioned
 
@@ -153,7 +164,9 @@ class InstanceRuntime:
             ),
             peak_mem_bytes_per_device=float(peak),
         )
-        disc = compute_discount(self.profile, partitioned=self.partitioned)
+        disc = compute_discount(
+            self.profile, partitioned=self.partitioned, sku=self.sku
+        )
         # asymmetric profiles: MXU roof discounted (see module docstring)
         compute_s = report.compute_s / disc
         step_s = max(compute_s, report.memory_s, report.collective_s)

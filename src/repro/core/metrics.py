@@ -17,8 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.device import get_sku
 from repro.core.instance import InstanceRecord
-from repro.core.profiles import N_UNITS, PROFILES
 
 
 @dataclasses.dataclass
@@ -39,15 +39,16 @@ _METRICS = ("gract", "smact", "smocc_proxy", "drama")
 
 
 def device_group_report(
-    group: str, workload: str, records: Sequence[InstanceRecord]
+    group: str, workload: str, records: Sequence[InstanceRecord], sku=None
 ) -> DeviceGroupReport:
+    dev = get_sku(sku)
     inst_metrics = [dict(r.dcgm) for r in records]
-    occupied = sum(PROFILES[r.profile].mem_units for r in records)
+    occupied = sum(dev.profile(r.profile).mem_units for r in records)
     device = {}
     for m in _METRICS:
         device[m] = sum(
-            r.dcgm[m] * PROFILES[r.profile].mem_units for r in records
-        ) / N_UNITS
+            r.dcgm[m] * dev.profile(r.profile).mem_units for r in records
+        ) / dev.n_units
     return DeviceGroupReport(
         group=group,
         workload=workload,

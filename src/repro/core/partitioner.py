@@ -22,13 +22,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
-from repro.core.profiles import (
-    N_UNITS,
-    PROFILES,
-    Placement,
-    homogeneous_layout,
-    validate_layout,
-)
+from repro.core.device import get_sku
+from repro.core.profiles import Placement, homogeneous_layout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,23 +46,28 @@ class InstanceMesh:
         return f"{self.profile}@{self.placement.start}"
 
 
-def device_grid(devices: Optional[Sequence] = None, rows: Optional[int] = None) -> np.ndarray:
+def device_grid(
+    devices: Optional[Sequence] = None, rows: Optional[int] = None, sku=None
+) -> np.ndarray:
     """Arrange devices into a (rows, cols) grid. Default: squarest grid with
-    rows divisible by N_UNITS when possible, else rows=n (column vector)."""
+    rows divisible by the SKU's unit count when possible, else rows=n
+    (column vector)."""
+    n_units = get_sku(sku).n_units
     devs = list(devices if devices is not None else jax.devices())
     n = len(devs)
     if rows is None:
-        rows = N_UNITS if n % N_UNITS == 0 else n
+        rows = n_units if n % n_units == 0 else n
     assert n % rows == 0, f"{n} devices not divisible into {rows} rows"
     return np.array(devs, dtype=object).reshape(rows, n // rows)
 
 
-def rows_per_unit(grid: np.ndarray) -> int:
+def rows_per_unit(grid: np.ndarray, sku=None) -> int:
+    n_units = get_sku(sku).n_units
     rows = grid.shape[0]
-    assert rows % N_UNITS == 0, (
-        f"grid rows {rows} must be divisible by {N_UNITS} slice units"
+    assert rows % n_units == 0, (
+        f"grid rows {rows} must be divisible by {n_units} slice units"
     )
-    return rows // N_UNITS
+    return rows // n_units
 
 
 def instance_mesh(
@@ -75,10 +75,12 @@ def instance_mesh(
     placement: Placement,
     *,
     axis_names: Tuple[str, str] = ("data", "model"),
+    sku=None,
 ) -> InstanceMesh:
     """The contiguous sub-rectangle of ``grid`` owned by ``placement``."""
-    rpu = rows_per_unit(grid)
-    s0, s1 = placement.span
+    dev = get_sku(sku)
+    rpu = rows_per_unit(grid, dev)
+    s0, s1 = dev.span(placement)
     block = grid[s0 * rpu : s1 * rpu, :]
     mesh = Mesh(block, axis_names)
     return InstanceMesh(placement, mesh)
@@ -90,19 +92,24 @@ def partition(
     *,
     partitioned: bool = True,
     axis_names: Tuple[str, str] = ("data", "model"),
+    sku=None,
 ) -> List[InstanceMesh]:
     """Validate a layout against the placement tree and carve the submeshes."""
-    ok, why = validate_layout(placements, partitioned=partitioned)
+    dev = get_sku(sku)
+    ok, why = dev.validate_layout(placements, partitioned=partitioned)
     if not ok:
         raise ValueError(f"invalid MIG layout: {why}")
-    return [instance_mesh(grid, pl, axis_names=axis_names) for pl in placements]
+    return [
+        instance_mesh(grid, pl, axis_names=axis_names, sku=dev)
+        for pl in placements
+    ]
 
 
 def partition_homogeneous(
-    grid: np.ndarray, profile: str, **kw
+    grid: np.ndarray, profile: str, *, sku=None, **kw
 ) -> List[InstanceMesh]:
     """The paper's 'parallel' device group: max instances of one profile."""
-    return partition(grid, homogeneous_layout(profile), **kw)
+    return partition(grid, homogeneous_layout(profile, sku=sku), sku=sku, **kw)
 
 
 def verify_disjoint(instances: Sequence[InstanceMesh]) -> None:
@@ -119,13 +126,14 @@ def verify_disjoint(instances: Sequence[InstanceMesh]) -> None:
 
 
 def profile_mesh_shape(
-    profile: str, pod_shape: Tuple[int, int] = (16, 16)
+    profile: str, pod_shape: Tuple[int, int] = (16, 16), sku=None
 ) -> Tuple[int, int]:
     """Mesh shape an instance of ``profile`` gets on a ``pod_shape`` pod.
 
     Used by the analytical characterization to dry-run-lower a workload at
     instance scale without building the full pod grid.
     """
+    dev = get_sku(sku)
     rows, cols = pod_shape
-    rpu = rows // N_UNITS
-    return (PROFILES[profile].mem_units * rpu, cols)
+    rpu = rows // dev.n_units
+    return (dev.profile(profile).mem_units * rpu, cols)

@@ -21,17 +21,18 @@ of that idea, in two tiers:
 Each estimate carries an SLO-constrained *goodput* (steps/s, zeroed for a
 serve job whose predicted step misses its SLO — the same currency as
 ``ClusterReport.goodput_steps_per_s``), which is what the optimizer
-maximizes. Estimates are memoized on (arch, shape, profile, demand, peak
-multiplier, SLO): the planner's inner loop prices thousands of
-(job x slice) pairs per dispatch and the vectors repeat heavily.
+maximizes. Estimates are memoized on (SKU, arch, shape, profile, demand,
+peak multiplier, SLO): the planner's inner loop prices thousands of
+(job x slice) pairs per dispatch and the vectors repeat heavily — and the
+SKU in the key guarantees two generations' estimates can never
+cross-contaminate (tests/test_device.py proves it).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple, Union
 
-from repro.core.instance import compute_discount
-from repro.core.profiles import N_UNITS, PROFILES
+from repro.core.device import DeviceSKU, format_gib, get_sku
 from repro.core.workload import (
     STEADY_DEMAND,
     DemandTrace,
@@ -40,20 +41,23 @@ from repro.core.workload import (
 )
 from repro.telemetry.constants import HBM_PER_CHIP
 
-_FULL_PROFILE = "7g.40gb"
+_FULL_PROFILE = "7g.40gb"  # default-SKU shim; SKU-aware code reads sku.full_profile
 
 
-def record_fits(rec: Mapping, peak_mult: float) -> bool:
+def record_fits(
+    rec: Mapping, peak_mult: float, *, budget_bytes: int = HBM_PER_CHIP
+) -> bool:
     """The one memory-admission predicate, shared with
     ``CollocationScheduler.admissible``: flat jobs (peak multiplier 1.0)
     keep the record's own ``fits`` verdict bit for bit (absent key ==
     reject — the record never proved the job fits); phase-aware workloads
-    re-budget their phase-peak working set against the slice's HBM."""
+    re-budget their phase-peak working set against the slice's HBM
+    (``budget_bytes`` — the SKU's per-chip slice budget)."""
     if peak_mult == 1.0:
         return bool(rec.get("fits", False))
     return (
         float(rec.get("peak_bytes_per_device", 0.0)) * peak_mult
-        <= HBM_PER_CHIP
+        <= budget_bytes
     )
 
 
@@ -75,7 +79,7 @@ class SliceEstimate:
         return 1.0 / self.step_s if self.fits and self.step_s > 0 else 0.0
 
 
-def predict_record(full_rec: Mapping, profile: str) -> Dict[str, float]:
+def predict_record(full_rec: Mapping, profile: str, sku=None) -> Dict[str, float]:
     """Derive a slice record from the full-device record, MISO-style.
 
     The busy terms scale with the inverse of the slice's chip fraction
@@ -87,16 +91,17 @@ def predict_record(full_rec: Mapping, profile: str) -> Dict[str, float]:
     does not shrink with chip count; the sharded remainder makes this a
     slightly optimistic ``fits``, which is why measured records always win
     when present (docs/placement.md)."""
+    dev = get_sku(sku)
     step = float(full_rec.get("step_s", 0.0))
     compute = float(full_rec.get("compute_s", step))
     memory = float(full_rec.get("memory_s", 0.0))
     collective = float(full_rec.get("collective_s", 0.0))
     busy = max(compute, memory, collective)
     residual = max(0.0, step - busy)
-    frac = PROFILES[profile].mem_units / N_UNITS
-    full_frac = PROFILES[_FULL_PROFILE].mem_units / N_UNITS
+    frac = dev.profile(profile).mem_units / dev.n_units
+    full_frac = dev.profile(dev.full_profile).mem_units / dev.n_units
     scale = full_frac / frac
-    disc = compute_discount(profile) / compute_discount(_FULL_PROFILE)
+    disc = dev.compute_discount(profile) / dev.compute_discount(dev.full_profile)
     out_compute = compute * scale / disc
     out_memory = memory * scale
     out_collective = collective * scale
@@ -118,10 +123,19 @@ class PlanningCostModel:
 
     The DB is treated as immutable for the model's lifetime (the same
     contract ``CollocationScheduler`` holds); swap the model, not the DB.
+    Records must be keyed by the SKU's own profile names (an 80GB fleet's
+    DB speaks 1g.10gb, not 1g.5gb); the cache keys carry ``sku.name`` so a
+    model can never serve another generation's estimate.
     """
 
-    def __init__(self, char_db: Mapping[Tuple[str, str, str], Mapping]):
+    def __init__(
+        self,
+        char_db: Mapping[Tuple[str, str, str], Mapping],
+        *,
+        sku: Union[None, str, DeviceSKU] = None,
+    ):
         self.char_db = char_db
+        self.sku = get_sku(sku)
         self._cache: Dict[Tuple, SliceEstimate] = {}
 
     def estimate(
@@ -138,7 +152,8 @@ class PlanningCostModel:
         set against the slice's HBM."""
         peak_mult = peak_demand_multiplier(job)
         slo = getattr(job, "slo_step_s", None)
-        key = (job.arch, job.suite.name, profile, demand, peak_mult, slo)
+        key = (self.sku.name, job.arch, job.suite.name, profile, demand,
+               peak_mult, slo)
         hit = self._cache.get(key)
         if hit is not None:
             return hit
@@ -156,10 +171,11 @@ class PlanningCostModel:
         peak_mult: float,
         slo: Optional[float],
     ) -> SliceEstimate:
+        budget = self.sku.slice_bytes
         rec = self.char_db.get((arch, shape, profile))
         predicted = False
         if rec is None:
-            full = self.char_db.get((arch, shape, _FULL_PROFILE))
+            full = self.char_db.get((arch, shape, self.sku.full_profile))
             if full is None:
                 return SliceEstimate(
                     profile=profile,
@@ -171,25 +187,25 @@ class PlanningCostModel:
                     slo_ok=None,
                     predicted=True,
                 )
-            rec = predict_record(full, profile)
+            rec = predict_record(full, profile, sku=self.sku)
             predicted = True
         if predicted:
             # no measured verdict to honour: budget the predicted phase
             # peak directly against the slice HBM
             fits = (
                 float(rec.get("peak_bytes_per_device", 0.0)) * peak_mult
-                <= HBM_PER_CHIP
+                <= budget
             )
         else:
-            fits = record_fits(rec, peak_mult)
+            fits = record_fits(rec, peak_mult, budget_bytes=budget)
         if not fits:
             need = float(rec.get("peak_bytes_per_device", 0.0)) * peak_mult
             return SliceEstimate(
                 profile=profile,
                 fits=False,
                 reason=(
-                    f"OOM: needs {need / 2**30:.1f} GiB/chip (phase peak) "
-                    f"> {HBM_PER_CHIP / 2**30:.1f} GiB HBM on {profile}"
+                    f"OOM: needs {format_gib(need)} GiB/chip (phase peak) "
+                    f"> {format_gib(budget)} GiB HBM on {profile}"
                 ),
                 step_s=0.0,
                 goodput=0.0,

@@ -6,12 +6,20 @@ algebra (five profiles, fixed start offsets, the 4g+3g exclusion, and the
 *maximal* configs out of 296 valid non-empty layouts — small enough that the
 placement optimizer can afford exact search over all of them.
 
+Enumeration is **per device SKU** (core/device.py): every function takes an
+optional ``sku`` and defaults to the A100-40GB, and the memo tables key on
+the (hashable, frozen) SKU descriptor — so an A30's 4-slice tree and an
+H100's 1g.20gb-bearing tree each get their own canonical-config universe
+without cross-contaminating the default one (tests/test_device.py pins the
+per-SKU counts).
+
 Canonical form: a layout is a set of placements; its canonical form is the
-tuple sorted by (start, profile). Enumeration is memoized (the placement
-tree is a process-wide constant) and deterministic: the same call always
-returns the same tuple, in the same order, with no duplicates —
+tuple sorted by (start, profile). Enumeration is memoized (each SKU's
+placement tree is a process-wide constant) and deterministic: the same call
+always returns the same tuple, in the same order, with no duplicates —
 tests/test_planner.py pins all three properties plus the partitioner
-invariants (disjoint spans == ``verify_disjoint``, compute budget <= 7).
+invariants (disjoint spans == ``verify_disjoint``, compute budget within
+the SKU's slice budget).
 
 Incremental transitions: ``expansions(existing)`` returns every valid config
 reachable from a live layout by only *creating* instances (running jobs keep
@@ -26,7 +34,7 @@ from __future__ import annotations
 import functools
 from typing import Dict, FrozenSet, List, Sequence, Tuple
 
-from repro.core.profiles import PROFILES, Placement, validate_layout
+from repro.core.device import DeviceSKU, Placement, get_sku
 
 Config = Tuple[Placement, ...]
 
@@ -36,23 +44,21 @@ def canonical_form(placements: Sequence[Placement]) -> Config:
     return tuple(sorted(placements, key=lambda pl: (pl.start, pl.profile)))
 
 
-def _all_options() -> Tuple[Placement, ...]:
+def _all_options(sku: DeviceSKU) -> Tuple[Placement, ...]:
     return tuple(
-        Placement(name, s) for name, p in PROFILES.items() for s in p.starts
+        Placement(p.name, s) for p in sku.profiles for s in p.starts
     )
 
 
 @functools.lru_cache(maxsize=None)
-def enumerate_configs(partitioned: bool = True) -> Tuple[Config, ...]:
-    """All valid non-empty layouts of the placement tree, canonicalized,
-    deterministically ordered (by size, then lexicographically), memoized."""
-    options = _all_options()
+def _enumerate_cached(sku: DeviceSKU, partitioned: bool) -> Tuple[Config, ...]:
+    options = _all_options(sku)
     seen: Dict[Tuple, Config] = {}
 
     def rec(chosen: List[Placement], rest: Tuple[Placement, ...]) -> None:
         for i, cand in enumerate(rest):
             trial = chosen + [cand]
-            ok, _ = validate_layout(trial, partitioned=partitioned)
+            ok, _ = sku.validate_layout(trial, partitioned=partitioned)
             if not ok:
                 continue
             cfg = canonical_form(trial)
@@ -73,21 +79,21 @@ def enumerate_configs(partitioned: bool = True) -> Tuple[Config, ...]:
     )
 
 
-def _units(pl: Placement) -> FrozenSet[int]:
-    s0, s1 = pl.span
-    return frozenset(range(s0, s1))
+def enumerate_configs(partitioned: bool = True, sku=None) -> Tuple[Config, ...]:
+    """All valid non-empty layouts of the SKU's placement tree,
+    canonicalized, deterministically ordered (by size, then
+    lexicographically), memoized per SKU."""
+    return _enumerate_cached(get_sku(sku), partitioned)
 
 
 @functools.lru_cache(maxsize=None)
-def maximal_configs(partitioned: bool = True) -> Tuple[Config, ...]:
-    """Configs to which no further instance can be added — the analogue of
-    the A100's canonical partition profiles (18 under our algebra)."""
-    options = _all_options()
+def _maximal_cached(sku: DeviceSKU, partitioned: bool) -> Tuple[Config, ...]:
+    options = _all_options(sku)
     out = []
-    for cfg in enumerate_configs(partitioned):
+    for cfg in _enumerate_cached(sku, partitioned):
         have = set(cfg)
         addable = any(
-            validate_layout(list(cfg) + [o], partitioned=partitioned)[0]
+            sku.validate_layout(list(cfg) + [o], partitioned=partitioned)[0]
             for o in options
             if o not in have
         )
@@ -96,25 +102,48 @@ def maximal_configs(partitioned: bool = True) -> Tuple[Config, ...]:
     return tuple(out)
 
 
+def maximal_configs(partitioned: bool = True, sku=None) -> Tuple[Config, ...]:
+    """Configs to which no further instance can be added — the analogue of
+    the vendor's canonical partition profiles (18 under the A100-40GB
+    algebra; other SKUs have their own counts)."""
+    return _maximal_cached(get_sku(sku), partitioned)
+
+
 @functools.lru_cache(maxsize=None)
-def profile_multisets(partitioned: bool = True) -> Tuple[Tuple[str, ...], ...]:
-    """Distinct profile combinations over all valid layouts (start-blind)."""
+def _multisets_cached(
+    sku: DeviceSKU, partitioned: bool
+) -> Tuple[Tuple[str, ...], ...]:
     return tuple(
-        sorted({tuple(sorted(pl.profile for pl in cfg)) for cfg in enumerate_configs(partitioned)})
+        sorted(
+            {
+                tuple(sorted(pl.profile for pl in cfg))
+                for cfg in _enumerate_cached(sku, partitioned)
+            }
+        )
     )
+
+
+def profile_multisets(
+    partitioned: bool = True, sku=None
+) -> Tuple[Tuple[str, ...], ...]:
+    """Distinct profile combinations over all valid layouts (start-blind)."""
+    return _multisets_cached(get_sku(sku), partitioned)
 
 
 @functools.lru_cache(maxsize=None)
 def _expansions_cached(
-    existing: Config, blocked_units: FrozenSet[int], partitioned: bool
+    sku: DeviceSKU,
+    existing: Config,
+    blocked_units: FrozenSet[int],
+    partitioned: bool,
 ) -> Tuple[Config, ...]:
     have = set(existing)
     out = []
-    for cfg in enumerate_configs(partitioned):
+    for cfg in _enumerate_cached(sku, partitioned):
         if not have <= set(cfg):
             continue
         new = [pl for pl in cfg if pl not in have]
-        if any(_units(pl) & blocked_units for pl in new):
+        if any(sku.units(pl) & blocked_units for pl in new):
             continue
         out.append(cfg)
     if not existing:
@@ -130,30 +159,35 @@ def expansions(
     *,
     blocked_units: FrozenSet[int] = frozenset(),
     partitioned: bool = True,
+    sku=None,
 ) -> Tuple[Config, ...]:
     """Every valid config reachable from ``existing`` by only creating
     instances (supersets of the live layout), with no new instance touching
     a blocked (failed) slice unit. Includes ``existing`` itself (the
     zero-transition plan). ``existing`` must already be a valid layout."""
+    dev = get_sku(sku)
     cfg = canonical_form(existing)
     if cfg:
-        ok, why = validate_layout(cfg, partitioned=partitioned)
+        ok, why = dev.validate_layout(cfg, partitioned=partitioned)
         if not ok:
             raise ValueError(f"existing layout invalid: {why}")
-    return _expansions_cached(cfg, frozenset(blocked_units), partitioned)
+    return _expansions_cached(dev, cfg, frozenset(blocked_units), partitioned)
 
 
 @functools.lru_cache(maxsize=None)
 def _free_cached(
-    existing: Config, blocked_units: FrozenSet[int], partitioned: bool
+    sku: DeviceSKU,
+    existing: Config,
+    blocked_units: FrozenSet[int],
+    partitioned: bool,
 ) -> Tuple[Placement, ...]:
     have = set(existing)
     base = list(existing)
     out = []
-    for cand in _all_options():
-        if cand in have or _units(cand) & blocked_units:
+    for cand in _all_options(sku):
+        if cand in have or sku.units(cand) & blocked_units:
             continue
-        if validate_layout(base + [cand], partitioned=partitioned)[0]:
+        if sku.validate_layout(base + [cand], partitioned=partitioned)[0]:
             out.append(cand)
     return tuple(out)
 
@@ -163,11 +197,13 @@ def free_placements(
     *,
     blocked_units: FrozenSet[int] = frozenset(),
     partitioned: bool = True,
+    sku=None,
 ) -> Tuple[Placement, ...]:
     """Placements individually addable to ``existing`` (one-step moves).
     Memoized on the canonical form — the optimizer's innermost loop."""
     return _free_cached(
-        canonical_form(existing), frozenset(blocked_units), partitioned
+        get_sku(sku), canonical_form(existing), frozenset(blocked_units),
+        partitioned,
     )
 
 
@@ -176,6 +212,7 @@ def flexibility(
     *,
     blocked_units: FrozenSet[int] = frozenset(),
     partitioned: bool = True,
+    sku=None,
 ) -> int:
     """How much future capacity a layout preserves: the number of distinct
     placements still addable to it. The optimizer uses this as its final
@@ -184,7 +221,8 @@ def flexibility(
     fragmentation greedy first-fit walks straight into."""
     return len(
         free_placements(
-            layout, blocked_units=blocked_units, partitioned=partitioned
+            layout, blocked_units=blocked_units, partitioned=partitioned,
+            sku=sku,
         )
     )
 

@@ -58,6 +58,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, FrozenSet, List, Mapping, Optional, Sequence, Tuple
 
+from repro.core.device import DEFAULT_SKU, DeviceSKU, Placement
 from repro.core.planner.costmodel import PlanningCostModel, SliceEstimate
 from repro.core.planner.enumerator import (
     canonical_form,
@@ -66,13 +67,11 @@ from repro.core.planner.enumerator import (
     free_placements,
     transition,
 )
-from repro.core.profiles import PROFILES, Placement
 from repro.core.workload import STEADY_DEMAND, DemandTrace
 
-# smallest-first, same order the greedy scheduler widens through
-PROFILE_ORDER: Tuple[str, ...] = tuple(
-    sorted(PROFILES, key=lambda n: (PROFILES[n].mem_units, PROFILES[n].compute_slices))
-)
+# smallest-first, same order the greedy scheduler widens through (the
+# default SKU's; per-SKU plans read ``sku.profile_order`` instead)
+PROFILE_ORDER: Tuple[str, ...] = DEFAULT_SKU.profile_order
 
 #: Above this many candidate jobs the optimizer switches to the beam path.
 EXACT_MAX_JOBS = 6
@@ -103,6 +102,9 @@ class PlacementPlan:
     optimality: str  # "exact" | "beam"
     gap: float
     configs_evaluated: int
+    # the device generation the plan was searched over — needed so `score`
+    # prices compute thrift with the right tree
+    sku: DeviceSKU = DEFAULT_SKU
 
     @property
     def score(self) -> Tuple[float, float, int, int, float]:
@@ -113,7 +115,7 @@ class PlacementPlan:
             self.placed_weight,
             self.kept_weight,
             self.flexibility,
-            -_compute_slices(self.layout),
+            -_compute_slices(self.layout, self.sku),
             self.goodput,
         )
 
@@ -126,28 +128,32 @@ def _job_weight(job) -> float:
     return 1.0 + float(getattr(job, "priority", 0))
 
 
-def _compute_slices(cfg: Sequence[Placement]) -> int:
-    return sum(PROFILES[pl.profile].compute_slices for pl in cfg)
+def _compute_slices(cfg: Sequence[Placement], sku: DeviceSKU = DEFAULT_SKU) -> int:
+    return sum(sku.profile(pl.profile).compute_slices for pl in cfg)
 
 
-def _eligible_profiles(job) -> Tuple[str, ...]:
-    """Profiles the job may use, honouring its straggler-repack floor."""
+def _eligible_profiles(job, sku: DeviceSKU) -> Tuple[str, ...]:
+    """Profiles the job may use, honouring its straggler-repack floor (a
+    floor naming another generation's profile does not bind — same
+    convention as ``CollocationScheduler.smallest_admissible``)."""
+    order = sku.profile_order
     floor = getattr(job, "min_profile", None)
-    start = PROFILE_ORDER.index(floor) if floor else 0
-    return PROFILE_ORDER[start:]
+    start = order.index(floor) if floor and floor in order else 0
+    return order[start:]
 
 
 def _estimates(
     jobs: Sequence,
     cost: PlanningCostModel,
     active_phases: Mapping[str, DemandTrace],
+    sku: DeviceSKU,
 ) -> List[Dict[str, SliceEstimate]]:
     """Per job: profile -> estimate, restricted to eligible+fitting slices."""
     out = []
     for job in jobs:
         demand = active_phases.get(job.name, STEADY_DEMAND)
         ests = {}
-        for prof in _eligible_profiles(job):
+        for prof in _eligible_profiles(job, sku):
             est = cost.estimate(job, prof, demand)
             if est.fits:
                 ests[prof] = est
@@ -155,14 +161,14 @@ def _estimates(
     return out
 
 
-def _unplaced_reason(job, cost, active_phases) -> str:
+def _unplaced_reason(job, cost, active_phases, sku: DeviceSKU) -> str:
     demand = active_phases.get(job.name, STEADY_DEMAND)
     reasons = [
         f"{p}: {cost.estimate(job, p, demand).reason}"
-        for p in _eligible_profiles(job)
+        for p in _eligible_profiles(job, sku)
         if not cost.estimate(job, p, demand).fits
     ]
-    if len(reasons) == len(_eligible_profiles(job)):
+    if len(reasons) == len(_eligible_profiles(job, sku)):
         return "; ".join(reasons[:2])
     return "no free placement slot in the best plan"
 
@@ -195,24 +201,30 @@ def plan_placements(
     current instance — the kept-weight term then makes eviction a last
     resort, and the *caller* (core/cluster.py) is responsible for charging
     the displaced jobs' rollback and the device downtime when it commits
-    such a plan."""
+    such a plan.
+
+    The partition tree searched is the cost model's device generation
+    (``cost.sku``) — heterogeneous fleets plan each device over its own
+    tree."""
     active_phases = active_phases or {}
     preferred = preferred or {}
     jobs = list(jobs)
     blocked_units = frozenset(blocked_units)
+    sku = cost.sku
     existing_cfg = canonical_form(existing)
-    ests = _estimates(jobs, cost, active_phases)
+    ests = _estimates(jobs, cost, active_phases, sku)
 
     if len(jobs) <= exact_max_jobs:
         best = _plan_exact(
-            jobs, ests, existing_cfg, blocked_units, partitioned, preferred
+            jobs, ests, existing_cfg, blocked_units, partitioned, preferred,
+            sku,
         )
         optimality, gap = "exact", 0.0
         configs_evaluated = best.pop("configs_evaluated")
     else:
         best = _plan_beam(
             jobs, ests, existing_cfg, blocked_units, partitioned, preferred,
-            beam_width,
+            beam_width, sku,
         )
         configs_evaluated = best.pop("configs_evaluated")
         optimality = "beam"
@@ -230,7 +242,7 @@ def plan_placements(
     assignments: Dict[str, Placement] = best["assignments"]
     step_s = {name: best["steps"][name] for name in assignments}
     unplaced = tuple(
-        (j.name, _unplaced_reason(j, cost, active_phases))
+        (j.name, _unplaced_reason(j, cost, active_phases, sku))
         for j in jobs
         if j.name not in assignments
     )
@@ -245,16 +257,18 @@ def plan_placements(
         kept_weight=best["kept"],
         goodput=best["goodput"],
         flexibility=flexibility(
-            layout, blocked_units=blocked_units, partitioned=partitioned
+            layout, blocked_units=blocked_units, partitioned=partitioned,
+            sku=sku,
         ),
         optimality=optimality,
         gap=gap,
         configs_evaluated=configs_evaluated,
+        sku=sku,
     )
 
 
 def _plan_exact(
-    jobs, ests, existing_cfg, blocked_units, partitioned, preferred
+    jobs, ests, existing_cfg, blocked_units, partitioned, preferred, sku
 ) -> Dict:
     """Exhaustive (config x assignment) search, optimal under the model."""
     existing_set = set(existing_cfg)
@@ -269,7 +283,8 @@ def _plan_exact(
     best_key: Optional[Tuple] = None
     n = len(jobs)
     configs = expansions(
-        existing_cfg, blocked_units=blocked_units, partitioned=partitioned
+        existing_cfg, blocked_units=blocked_units, partitioned=partitioned,
+        sku=sku,
     )
     for cfg in configs:
         slots = [pl for pl in cfg if pl not in existing_set]
@@ -310,9 +325,9 @@ def _plan_exact(
             continue
         mask, (w, k, g) = max(dp.items(), key=lambda kv: (kv[1], -kv[0]))
         flex = flexibility(
-            cfg, blocked_units=blocked_units, partitioned=partitioned
+            cfg, blocked_units=blocked_units, partitioned=partitioned, sku=sku
         )
-        score = (w, k, flex, -_compute_slices(cfg), g)
+        score = (w, k, flex, -_compute_slices(cfg, sku), g)
         key = _config_key(cfg)
         if score > best_score or (
             score == best_score and (best_key is None or key < best_key)
@@ -340,7 +355,8 @@ def _plan_exact(
 
 
 def _plan_beam(
-    jobs, ests, existing_cfg, blocked_units, partitioned, preferred, beam_width
+    jobs, ests, existing_cfg, blocked_units, partitioned, preferred,
+    beam_width, sku
 ) -> Dict:
     """Beam search over partial layouts; same objective, bounded width."""
     order = sorted(
@@ -376,7 +392,8 @@ def _plan_beam(
         for layout, assign, steps, w, k, g in states:
             consider((layout, assign, steps, w, k, g))  # leave job unplaced
             for pl in free_placements(
-                layout, blocked_units=blocked_units, partitioned=partitioned
+                layout, blocked_units=blocked_units, partitioned=partitioned,
+                sku=sku,
             ):
                 est = je.get(pl.profile)
                 if est is None:
@@ -398,9 +415,10 @@ def _plan_beam(
                 -st[3],
                 -st[4],
                 -flexibility(
-                    st[0], blocked_units=blocked_units, partitioned=partitioned
+                    st[0], blocked_units=blocked_units, partitioned=partitioned,
+                    sku=sku,
                 ),
-                _compute_slices(st[0]),
+                _compute_slices(st[0], sku),
                 -st[5],
                 _config_key(st[0]),
                 assign_key(st[1]),

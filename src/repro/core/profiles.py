@@ -12,105 +12,75 @@ The reserved 8th unit reproduces the paper's F6 finding (enabling MIG costs
 one compute slice): ``partitioned=True`` keeps unit 7 for the control plane
 and jobs may only use units 0..6 — except the full-device ``7g`` profile,
 which owns all 8 memory units like MIG's 7g.40gb owns the full 40 GB.
+
+Since the device-model API landed (core/device.py), the tree lives on a
+:class:`~repro.core.device.DeviceSKU` and this module is the
+**backwards-compatible view of the default SKU** (``a100-40gb`` — the
+paper's device): ``PROFILES`` / ``N_UNITS`` / ``N_COMPUTE_SLICES`` /
+``EXCLUSIONS`` are aliases of the default SKU's fields, and every function
+takes an optional ``sku`` to operate on another registered generation.
+New code should prefer ``device.get_sku(...)`` and the SKU methods
+directly; these shims exist so the 12+ existing import sites (and any
+external callers) keep working unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from typing import Dict, FrozenSet, List, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Sequence, Tuple, Union
 
-from repro.telemetry.constants import HBM_PER_CHIP
+# Re-exported for backwards compatibility: these classes moved to the
+# device-model module so the SKU registry can own the placement tree.
+from repro.core.device import (  # noqa: F401
+    DEFAULT_SKU,
+    DeviceSKU,
+    InstanceProfile,
+    Placement,
+    get_sku,
+)
+from repro.telemetry.constants import HBM_PER_CHIP  # noqa: F401  (re-export)
 
-N_UNITS = 8  # memory slice units (placement granularity)
-N_COMPUTE_SLICES = 7  # usable compute slices when partitioned
+SkuArg = Union[None, str, DeviceSKU]
 
+N_UNITS = DEFAULT_SKU.n_units  # memory slice units (placement granularity)
+N_COMPUTE_SLICES = DEFAULT_SKU.n_compute_slices  # usable when partitioned
 
-@dataclasses.dataclass(frozen=True)
-class InstanceProfile:
-    """One MIG profile mapped to pod slice units."""
-
-    name: str  # canonical MIG name, kept paper-faithful
-    compute_slices: int  # of 7 — scales the analytical compute roof
-    mem_units: int  # of 8 — placement span in slice units
-    starts: Tuple[int, ...]  # allowed start offsets (placement tree)
-
-    @property
-    def max_instances(self) -> int:
-        return len(self.starts)
-
-
-# The five profiles the paper sweeps (A100-40GB placement tree).
-PROFILES: Dict[str, InstanceProfile] = {
-    "1g.5gb": InstanceProfile("1g.5gb", 1, 1, (0, 1, 2, 3, 4, 5, 6)),
-    "2g.10gb": InstanceProfile("2g.10gb", 2, 2, (0, 2, 4)),
-    "3g.20gb": InstanceProfile("3g.20gb", 3, 4, (0, 4)),
-    "4g.20gb": InstanceProfile("4g.20gb", 4, 4, (0,)),
-    "7g.40gb": InstanceProfile("7g.40gb", 7, 8, (0,)),
-}
+# The five profiles the paper sweeps (A100-40GB placement tree) — the
+# default SKU's own table, aliased.
+PROFILES: Dict[str, InstanceProfile] = DEFAULT_SKU.profiles_by_name
 
 # NVIDIA's documented invalid combination despite slices summing <= max
 # (paper §2.1): one cannot create 4g.20gb + 3g.20gb together.
-EXCLUSIONS: Tuple[FrozenSet[str], ...] = (frozenset({"4g.20gb", "3g.20gb"}),)
-
-
-@dataclasses.dataclass(frozen=True)
-class Placement:
-    profile: str
-    start: int  # slice-unit offset
-
-    @property
-    def span(self) -> Tuple[int, int]:
-        p = PROFILES[self.profile]
-        return (self.start, self.start + p.mem_units)
+EXCLUSIONS: Tuple[FrozenSet[str], ...] = DEFAULT_SKU.exclusions
 
 
 def validate_layout(
-    placements: Sequence[Placement], *, partitioned: bool = True
+    placements: Sequence[Placement],
+    *,
+    partitioned: bool = True,
+    sku: SkuArg = None,
 ) -> Tuple[bool, str]:
     """Check a set of instance placements against the placement tree."""
-    names = [pl.profile for pl in placements]
-    for pl in placements:
-        if pl.profile not in PROFILES:
-            return False, f"unknown profile {pl.profile}"
-        p = PROFILES[pl.profile]
-        if pl.start not in p.starts:
-            return False, f"{pl.profile} may not start at unit {pl.start}"
-    # overlap check
-    spans = sorted(pl.span for pl in placements)
-    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
-        if b0 < a1:
-            return False, f"overlapping spans {(a0, a1)} and {(b0, b1)}"
-    # compute-slice budget: 7 usable slices when partitioned (the 8th is the
-    # MIG overhead slice — modelled as the per-profile compute discount
-    # cs/mu in core/instance.py, reproducing F6 analytically)
-    total_c = sum(PROFILES[n].compute_slices for n in names)
-    if total_c > N_COMPUTE_SLICES:
-        return False, f"compute slices {total_c} > {N_COMPUTE_SLICES}"
-    # documented exclusions
-    for bad in EXCLUSIONS:
-        if bad <= set(names):
-            return False, f"excluded combination {sorted(bad)}"
-    return True, ""
+    return get_sku(sku).validate_layout(placements, partitioned=partitioned)
 
 
-def homogeneous_layout(profile: str) -> List[Placement]:
+def homogeneous_layout(profile: str, sku: SkuArg = None) -> List[Placement]:
     """The paper's 'parallel' device group: max instances of one profile."""
-    p = PROFILES[profile]
-    placements = []
-    occupied = 0
-    for s in p.starts:
-        if s >= occupied:
-            placements.append(Placement(profile, s))
-            occupied = s + p.mem_units
-    return placements
+    return get_sku(sku).homogeneous_layout(profile)
 
 
-def enumerate_layouts(max_results: int = 64) -> List[Tuple[Placement, ...]]:
-    """All valid (order-insensitive) layouts — scheduler search space."""
+def enumerate_layouts(
+    max_results: int = 64, sku: SkuArg = None
+) -> List[Tuple[Placement, ...]]:
+    """All valid (order-insensitive) layouts — scheduler search space.
+
+    (The planner's ``enumerator.enumerate_configs`` is the memoized,
+    exhaustive sibling; this bounded variant predates it and stays for the
+    callers pinned to its ordering.)
+    """
+    dev = get_sku(sku)
     options = [
-        Placement(name, s) for name, p in PROFILES.items() for s in p.starts
+        Placement(p.name, s) for p in dev.profiles for s in p.starts
     ]
-    results = []
+    results: List[Tuple[Placement, ...]] = []
     seen = set()
 
     def rec(chosen: List[Placement], rest: List[Placement]):
@@ -118,12 +88,12 @@ def enumerate_layouts(max_results: int = 64) -> List[Tuple[Placement, ...]]:
             return
         key = frozenset((c.profile, c.start) for c in chosen)
         if chosen and key not in seen:
-            ok, _ = validate_layout(chosen)
+            ok, _ = dev.validate_layout(chosen)
             if ok:
                 seen.add(key)
                 results.append(tuple(sorted(chosen, key=lambda c: c.start)))
         for i, cand in enumerate(rest):
-            ok, _ = validate_layout(chosen + [cand])
+            ok, _ = dev.validate_layout(chosen + [cand])
             if ok:
                 rec(chosen + [cand], rest[i + 1:])
 
@@ -131,5 +101,7 @@ def enumerate_layouts(max_results: int = 64) -> List[Tuple[Placement, ...]]:
     return results
 
 
-def instance_hbm_bytes(profile: str, chips_per_unit: int) -> int:
-    return PROFILES[profile].mem_units * chips_per_unit * HBM_PER_CHIP
+def instance_hbm_bytes(
+    profile: str, chips_per_unit: int, sku: SkuArg = None
+) -> int:
+    return get_sku(sku).instance_hbm_bytes(profile, chips_per_unit)

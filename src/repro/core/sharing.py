@@ -296,12 +296,21 @@ def shared_mode_report(
     jobs: Sequence[SoloProfile],
     *,
     hbm_budget_bytes: int = HBM_PER_CHIP,
+    switch_overhead_frac: float = NAIVE_SWITCH_OVERHEAD_FRAC,
 ) -> SharedModeReport:
-    """Dispatch to the contention model for a *shared* mode (not MIG)."""
+    """Dispatch to the contention model for a *shared* mode (not MIG).
+
+    ``hbm_budget_bytes`` and ``switch_overhead_frac`` are per-device-SKU
+    knobs (core/device.py) — the scheduler threads its SKU's values in;
+    the defaults are the A100-40GB baseline."""
     if mode == CollocationMode.MPS:
         return mps_contention(jobs, hbm_budget_bytes=hbm_budget_bytes)
     if mode == CollocationMode.NAIVE:
-        return naive_contention(jobs, hbm_budget_bytes=hbm_budget_bytes)
+        return naive_contention(
+            jobs,
+            hbm_budget_bytes=hbm_budget_bytes,
+            switch_overhead_frac=switch_overhead_frac,
+        )
     raise ValueError(f"{mode} is not a shared mode — use the MIG scheduler path")
 
 

@@ -73,9 +73,10 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from repro.configs.base import ShapeSuite
 from repro.configs.registry import CONFIGS
 from repro.core.cluster import Cluster
-from repro.core.instance import JobSpec, compute_discount
-from repro.core.profiles import N_UNITS, PROFILES
-from repro.core.sharing import STEP_LATENCY_S, CollocationMode
+from repro.core.collocation import is_sku_keyed_db
+from repro.core.device import DEFAULT_SKU, SKUS, DeviceSKU, format_gib, get_sku
+from repro.core.instance import JobSpec
+from repro.core.sharing import CollocationMode
 from repro.core.workload import Workload, serve_workload, train_workload
 from repro.telemetry.constants import HBM_PER_CHIP
 
@@ -99,6 +100,11 @@ SIM_SAMPLES_PER_EPOCH = 3200
 #            starts are units {0, 2, 4}, so greedy first-fit 1g packing
 #            strands it while the planner's flexibility tie-break keeps a
 #            legal start open (the fragmentation scenario's pivot class).
+#   xlarge   working set bigger than the whole 40GB part: its full-device
+#            solo peak exceeds every a100-40gb/a30-24gb slice budget, so
+#            only the 80GB generations' full slice admits it (serve
+#            sessions halve the working set but still need > 16 GiB) — the
+#            hetero_sku scenario's pivot class.
 SIM_WORKLOADS: Dict[str, Dict] = {
     "resnet_small": {"cls": "tiny", "busy_s": 1.0e-4, "repl": 0.05, "shard": 0.005},
     "whisper-base": {"cls": "tiny", "busy_s": 1.5e-4, "repl": 0.06, "shard": 0.005},
@@ -107,7 +113,18 @@ SIM_WORKLOADS: Dict[str, Dict] = {
     "resnet_medium": {"cls": "medium", "busy_s": 4.0e-3, "repl": 0.22, "shard": 0.22},
     "llama3-8b": {"cls": "medium", "busy_s": 5.0e-3, "repl": 0.24, "shard": 0.20},
     "resnet_large": {"cls": "large", "busy_s": 2.0e-2, "repl": 0.35, "shard": 0.35},
+    "qwen2-72b": {"cls": "xlarge", "busy_s": 3.0e-2, "repl": 2.60, "shard": 0.80},
 }
+
+#: The catalog's busy/footprint terms are defined on the 8-unit A100-40GB
+#: baseline device; other SKUs scale by their own unit count and
+#: compute_scale (synthetic_char_db).
+_BASELINE_UNITS = DEFAULT_SKU.n_units
+
+#: The mixed-generation fleet the hetero_sku scenario provisions (cycled
+#: over --devices): the paper's part, its doubled-memory sibling, and the
+#: 4-slice A30 — three placement trees in one cluster.
+HETERO_FLEET_SKUS = ("a100-40gb", "a100-80gb", "a30-24gb")
 
 _MIX = (  # mixed_dynamic draw weights
     ("resnet_small", 0.35),
@@ -137,8 +154,11 @@ SERVE_SUITE = ShapeSuite("sim", 1024, 32, "decode")
 # Per-arch p99 step-latency SLO for inference sessions: ~15% headroom over
 # the decode step on a MIG 1g.5gb slice, so an isolated slice always
 # attains it while a dispatch-queue factor F_lat >= ~1.4 under shared
-# collocation with saturating training neighbours misses it.
-SERVE_SLO_S = {"whisper-base": 1.4e-3, "granite-3-2b": 1.35e-3}
+# collocation with saturating training neighbours misses it. The xlarge
+# serve arch is budgeted against its only admissible slice — the 80GB
+# generation's full profile.
+SERVE_SLO_S = {"whisper-base": 1.4e-3, "granite-3-2b": 1.35e-3,
+               "qwen2-72b": 9.0e-3}
 
 SCENARIO_HELP = {
     "aligned_static": "partition-aligned batch at t=0 — the mix MIG is built for",
@@ -147,6 +167,9 @@ SCENARIO_HELP = {
     "train_serve_mix": "phase-aware training + latency-SLO inference sessions",
     "fragmentation": "1g stream then 2g-class jobs — greedy first-fit strands "
                      "a slice the placement planner keeps open",
+    "hetero_sku": "mixed-generation fleet (a100-40gb + a100-80gb + a30-24gb): "
+                  "the queue drains each job onto whichever tree fits it; "
+                  "big-memory serve jobs only fit the 80GB slices",
 }
 POLICY_HELP = {
     "all-mig": "homogeneous MIG fleet, greedy first-fit placement",
@@ -161,36 +184,57 @@ POLICIES = tuple(POLICY_HELP)
 
 
 def synthetic_char_db(
-    workloads: Optional[Dict[str, Dict]] = None, suite: ShapeSuite = SIM_SUITE
+    workloads: Optional[Dict[str, Dict]] = None,
+    suite: ShapeSuite = SIM_SUITE,
+    sku: Union[None, str, DeviceSKU] = None,
 ) -> Dict[Tuple[str, str, str], dict]:
-    """Characterization records per (arch, suite, profile), analytically.
+    """Characterization records per (arch, suite, profile), analytically,
+    over one device SKU's placement tree (default: the paper's A100-40GB —
+    byte-identical records to the pre-device-model catalog).
 
     Mirrors what launch/collocate.py measures: per-profile step time from
     the roofline terms with the F6 compute discount, and per-chip peak
-    memory from the replicated + sharded working-set split. All archs must
-    exist in the workload registry — the trace generator draws real keys.
+    memory from the replicated + sharded working-set split. The catalog
+    terms are defined on the 8-unit baseline device, so a slice's busy
+    time scales with the baseline-relative unit fraction (an A30's full
+    4-unit device is half an A100 pod) divided by the SKU's generation
+    speedup, and ``fits`` budgets the absolute working set against the
+    SKU's own slice bytes. All archs must exist in the workload registry —
+    the trace generator draws real keys.
     """
+    dev = get_sku(sku)
     workloads = workloads if workloads is not None else SIM_WORKLOADS
     db: Dict[Tuple[str, str, str], dict] = {}
     for arch, w in workloads.items():
         if arch not in CONFIGS:
             raise KeyError(f"{arch!r} is not a registry arch")
-        for prof_name, prof in PROFILES.items():
-            chips_frac = prof.mem_units / N_UNITS  # fraction of pod chips
-            disc = compute_discount(prof_name)
-            compute_s = w["busy_s"] / chips_frac / disc
+        for prof in dev.profiles:
+            chips_frac = prof.mem_units / _BASELINE_UNITS  # of baseline pod
+            disc = dev.compute_discount(prof.name)
+            compute_s = w["busy_s"] / chips_frac / disc / dev.compute_scale
             memory_s = 0.3 * compute_s
             collective_s = 0.1 * compute_s
-            peak_frac = w["repl"] + w["shard"] / chips_frac
-            db[(arch, suite.name, prof_name)] = {
-                "fits": peak_frac <= 1.0,
-                "step_s": compute_s + STEP_LATENCY_S,
+            peak_bytes = (w["repl"] + w["shard"] / chips_frac) * HBM_PER_CHIP
+            db[(arch, suite.name, prof.name)] = {
+                "fits": peak_bytes <= dev.slice_bytes,
+                "step_s": compute_s + dev.step_latency_s,
                 "compute_s": compute_s,
                 "memory_s": memory_s,
                 "collective_s": collective_s,
-                "peak_bytes_per_device": peak_frac * HBM_PER_CHIP,
+                "peak_bytes_per_device": peak_bytes,
             }
     return db
+
+
+def synthetic_sku_dbs(
+    sku_names: Sequence[str],
+) -> Dict[str, Dict[Tuple[str, str, str], dict]]:
+    """Per-SKU characterization DBs (each speaks its own profile names) —
+    the ``char_db`` shape ``Cluster`` takes for a mixed-generation fleet."""
+    return {
+        name: synthetic_char_db(sku=name)
+        for name in dict.fromkeys(sku_names)
+    }
 
 
 def load_char_db(artifact_dir: Path) -> Dict[Tuple[str, str, str], dict]:
@@ -324,6 +368,44 @@ def fragmentation_trace(
     return trace
 
 
+def hetero_sku_trace(
+    rng: random.Random, n_jobs: int, *, mean_interarrival_s: float = 0.05
+) -> List[TraceItem]:
+    """The mixed-generation fleet's mix on one Poisson stream: ~25%
+    big-memory inference sessions (xlarge: the 80GB generation's full
+    slice is the only instance in the whole fleet that admits their
+    working set), plus slice-aligned 1g jobs (fit every tree), 2g-class
+    jobs (fit the 40/80GB 2g slices and the A30's 2g.12gb), and tiny
+    filler. The queue, not the operator, routes each job to whichever
+    generation's placement tree fits it."""
+    trace: List[TraceItem] = []
+    t = 0.0
+    for i in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival_s)
+        x = rng.random()
+        if x < 0.25:
+            wl = serve_workload(
+                f"hx{i}",
+                "qwen2-72b",
+                SERVE_SUITE,
+                slo_step_s=SERVE_SLO_S["qwen2-72b"],
+                prefill_steps=4,
+                priority=1,
+            )
+            trace.append((t, wl, 1))
+        elif x < 0.55:
+            trace.append(
+                (t, JobSpec(f"ha{i}", "granite-3-2b", SIM_SUITE), rng.randint(1, 2))
+            )
+        elif x < 0.80:
+            trace.append((t, JobSpec(f"ht{i}", "stablelm-12b", SIM_SUITE), 1))
+        else:
+            trace.append(
+                (t, JobSpec(f"hs{i}", "resnet_small", SIM_SUITE), rng.randint(1, 2))
+            )
+    return trace
+
+
 def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[TraceItem]:
     # fresh, scenario-salted RNG: identical trace for every policy
     rng = random.Random(f"{seed}:{scenario}")
@@ -337,28 +419,39 @@ def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[Tr
         return train_serve_mix_trace(rng, n_jobs)
     if scenario == "fragmentation":
         return fragmentation_trace(rng, n_jobs, n_devices)
+    if scenario == "hetero_sku":
+        return hetero_sku_trace(rng, n_jobs)
     raise ValueError(
         f"unknown scenario {scenario!r}; choose from: {', '.join(SCENARIOS)}"
     )
 
 
-def make_fleet(policy: str, n_devices: int) -> Tuple[List[Tuple[str, CollocationMode]], str]:
-    """(device list, cluster policy) for a fleet-mode policy."""
+def make_fleet(
+    policy: str, n_devices: int, skus: Sequence[str] = ("a100-40gb",)
+) -> Tuple[List[Tuple[str, CollocationMode, str]], str]:
+    """(device list, cluster policy) for a fleet-mode policy. ``skus`` is
+    cycled over the devices — one name for a homogeneous-generation fleet,
+    several (hetero_sku) for a mixed one."""
+    def fleet(mode: CollocationMode) -> List[Tuple[str, CollocationMode, str]]:
+        return [
+            (f"d{i}", mode, skus[i % len(skus)]) for i in range(n_devices)
+        ]
+
     modes = {
         "all-mig": CollocationMode.MIG,
         "all-mps": CollocationMode.MPS,
         "all-naive": CollocationMode.NAIVE,
     }
     if policy in modes:
-        return [(f"d{i}", modes[policy]) for i in range(n_devices)], "static"
+        return fleet(modes[policy]), "static"
     if policy == "best":
         # start from the paper's single-user recommendation (MPS) and let
         # per-device best_mode re-partition live as the mix drifts
-        return [(f"d{i}", CollocationMode.MPS) for i in range(n_devices)], "adaptive"
+        return fleet(CollocationMode.MPS), "adaptive"
     if policy == "planner":
         # same hardware as all-mig; only the placement decisions differ —
         # the printed deltas against all-mig are pure planner effects
-        return [(f"d{i}", CollocationMode.MIG) for i in range(n_devices)], "planner"
+        return fleet(CollocationMode.MIG), "planner"
     raise ValueError(
         f"unknown fleet policy {policy!r}; choose from: {', '.join(POLICIES)}"
     )
@@ -376,10 +469,33 @@ def run_cell(
     n_devices: int = 4,
     reconfig_cost_s: float = 0.5,
     char_db: Optional[Dict] = None,
+    sku: str = "a100-40gb",
 ) -> Dict:
-    """One (scenario x policy) simulation; returns the artifact cell dict."""
-    db = char_db if char_db is not None else synthetic_char_db()
-    devices, cluster_policy = make_fleet(policy, n_devices)
+    """One (scenario x policy) simulation; returns the artifact cell dict.
+
+    ``sku`` selects the fleet's device generation (--sku); the hetero_sku
+    scenario overrides it with the fixed mixed-generation fleet. When
+    ``char_db`` is None, per-SKU synthetic DBs are built; a flat measured
+    DB (--db) only speaks one SKU's profile names, so it is rejected for
+    any other fleet."""
+    fleet_skus: Tuple[str, ...] = (
+        HETERO_FLEET_SKUS if scenario == "hetero_sku" else (sku,)
+    )
+    for name in fleet_skus:
+        get_sku(name)  # fail fast on unknown SKU names
+    if char_db is None:
+        db: Dict = synthetic_sku_dbs(fleet_skus)
+    elif is_sku_keyed_db(char_db):
+        db = char_db  # already per-SKU
+    elif set(fleet_skus) != {"a100-40gb"}:
+        raise ValueError(
+            "a flat characterization DB (--db) speaks a100-40gb profile "
+            f"names only; the {scenario!r} fleet needs SKUs "
+            f"{sorted(set(fleet_skus))} — drop --db or run the default SKU"
+        )
+    else:
+        db = char_db
+    devices, cluster_policy = make_fleet(policy, n_devices, fleet_skus)
     cluster = Cluster(
         db,
         devices,
@@ -393,7 +509,7 @@ def run_cell(
             spec, arrival_s, epochs=epochs, samples_per_epoch=SIM_SAMPLES_PER_EPOCH
         )
     report = cluster.run()
-    return {
+    cell = {
         "scenario": scenario,
         "policy": policy,
         "seed": seed,
@@ -403,6 +519,13 @@ def run_cell(
         "status": "OK",
         "report": report.to_dict(),
     }
+    # schema extension only where the hardware axis is exercised — default
+    # single-SKU cells stay byte-identical to the pre-device-model artifacts
+    if len(set(fleet_skus)) > 1:
+        cell["fleet_skus"] = list(fleet_skus)
+    elif fleet_skus[0] != "a100-40gb":
+        cell["sku"] = fleet_skus[0]
+    return cell
 
 
 def summarize_cell(cell: Dict) -> Dict:
@@ -439,8 +562,12 @@ def run_all(
     scenarios: Sequence[str] = SCENARIOS,
     policies: Sequence[str] = POLICIES,
     char_db: Optional[Dict] = None,
+    sku: str = "a100-40gb",
 ) -> List[Dict]:
-    db = char_db if char_db is not None else synthetic_char_db()
+    if char_db is None:
+        # one per-SKU DB set shared by every cell (covers the selected
+        # fleet SKU plus the hetero fleet's generations)
+        char_db = synthetic_sku_dbs((sku,) + HETERO_FLEET_SKUS)
     return [
         run_cell(
             sc,
@@ -449,7 +576,8 @@ def run_all(
             n_jobs=n_jobs,
             n_devices=n_devices,
             reconfig_cost_s=reconfig_cost_s,
-            char_db=db,
+            char_db=char_db,
+            sku=sku,
         )
         for sc in scenarios
         for po in policies
@@ -482,12 +610,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--policies", default=",".join(POLICIES))
     ap.add_argument("--reconfig-cost", type=float, default=0.5,
                     help="device downtime charged per mode migration (s)")
+    ap.add_argument("--sku", default="a100-40gb", choices=sorted(SKUS),
+                    help="device generation of the fleet (core/device.py); "
+                         "the hetero_sku scenario always provisions its "
+                         "fixed mixed-generation fleet instead")
     ap.add_argument("--db", default=None,
                     help="load the char DB from collocate.py artifacts "
-                         "instead of the synthetic catalog")
+                         "instead of the synthetic catalog (a100-40gb "
+                         "profile names — default SKU fleets only)")
     ap.add_argument("--list", action="store_true",
-                    help="print the registered scenarios and fleet policies "
-                         "and exit")
+                    help="print the registered scenarios, fleet policies, "
+                         "and device SKUs, and exit")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -497,6 +630,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print("fleet policies:")
         for name, desc in POLICY_HELP.items():
             print(f"  {name:<16} {desc}")
+        print("device SKUs:")
+        for name, dev in SKUS.items():
+            default = " (default)" if dev is DEFAULT_SKU else ""
+            print(
+                f"  {name:<16} {dev.n_units} units x "
+                f"{format_gib(dev.slice_bytes)} GiB/slice, "
+                f"{dev.n_compute_slices} compute slices, "
+                f"{len(dev.profiles)} profiles{default}"
+            )
         return 0
 
     # fail fast with the registered choices listed — not a KeyError
@@ -517,14 +659,34 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         )
     if not scenarios or not policies:
         ap.error("need at least one scenario and one fleet policy")
+    if args.db and args.sku != "a100-40gb":
+        ap.error(
+            "--db loads a flat measured characterization DB, which speaks "
+            "a100-40gb profile names only; it cannot drive a "
+            f"--sku {args.sku} fleet"
+        )
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
-    char_db = load_char_db(Path(args.db)) if args.db else synthetic_char_db()
+    char_db = (
+        load_char_db(Path(args.db))
+        if args.db
+        else synthetic_sku_dbs((args.sku,) + HETERO_FLEET_SKUS)
+    )
 
     summaries: List[Dict] = []
     failures = 0
     for scenario in scenarios:
+        if args.db and scenario == "hetero_sku":
+            # a flat measured DB cannot price the mixed-generation fleet's
+            # per-SKU trees — documented skip, not a failure (the synthetic
+            # catalog path still covers the scenario)
+            print(
+                "[SKIP] hetero_sku: --db is a flat a100-40gb DB; the "
+                "mixed-generation fleet needs per-SKU records",
+                flush=True,
+            )
+            continue
         for policy in policies:
             try:
                 cell = run_cell(
@@ -535,6 +697,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     n_devices=args.devices,
                     reconfig_cost_s=args.reconfig_cost,
                     char_db=char_db,
+                    sku=args.sku,
                 )
                 _dump(out_dir / f"{scenario}__{policy}.json", cell)
                 s = summarize_cell(cell)

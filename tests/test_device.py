@@ -1,0 +1,358 @@
+"""Device-model API: SKU registry + default-SKU compatibility shims,
+per-SKU partition-tree enumeration invariants, memo-key isolation between
+generations, and the hetero_sku simulation's determinism."""
+import json
+
+import pytest
+
+from repro.core import profiles
+from repro.core.collocation import CollocationScheduler
+from repro.core.device import (
+    DEFAULT_SKU,
+    SKUS,
+    DeviceSKU,
+    InstanceProfile,
+    Placement,
+    format_gib,
+    get_sku,
+)
+from repro.core.instance import JobSpec
+from repro.core.planner.enumerator import enumerate_configs, maximal_configs
+from repro.core.sharing import CollocationMode
+from repro.telemetry.constants import HBM_PER_CHIP
+
+ALL_SKUS = sorted(SKUS)
+
+#: Pinned per-SKU partition-tree sizes: (valid layouts, maximal configs).
+#: a100-40gb is the documented 296/18 (the A100's ~19 canonical configs
+#: under our algebra); the others are this PR's reference counts — a
+#: placement-tree edit that moves them should have to say so here.
+TREE_SIZES = {
+    "a100-40gb": (296, 18),
+    "a100-80gb": (296, 18),
+    "h100-80gb": (721, 77),
+    "a30-24gb": (25, 5),
+}
+
+
+# -- registry + default-SKU shims ------------------------------------------------
+
+
+def test_registry_has_the_four_generations():
+    assert set(SKUS) == set(TREE_SIZES)
+    assert get_sku(None) is DEFAULT_SKU is SKUS["a100-40gb"]
+    assert get_sku("a30-24gb") is SKUS["a30-24gb"]
+    assert get_sku(SKUS["h100-80gb"]) is SKUS["h100-80gb"]
+    with pytest.raises(KeyError, match="a100-40gb"):  # lists the choices
+        get_sku("v100-16gb")
+
+
+def test_module_globals_alias_the_default_sku():
+    assert profiles.PROFILES is DEFAULT_SKU.profiles_by_name
+    assert profiles.N_UNITS == DEFAULT_SKU.n_units == 8
+    assert profiles.N_COMPUTE_SLICES == DEFAULT_SKU.n_compute_slices == 7
+    assert profiles.EXCLUSIONS == DEFAULT_SKU.exclusions
+    assert DEFAULT_SKU.slice_bytes == HBM_PER_CHIP
+
+
+def test_default_tree_is_byte_faithful_to_the_paper_table():
+    """The pre-device-model literal table, pinned: the default SKU must
+    reproduce the old module globals exactly."""
+    want = {
+        "1g.5gb": (1, 1, (0, 1, 2, 3, 4, 5, 6)),
+        "2g.10gb": (2, 2, (0, 2, 4)),
+        "3g.20gb": (3, 4, (0, 4)),
+        "4g.20gb": (4, 4, (0,)),
+        "7g.40gb": (7, 8, (0,)),
+    }
+    assert {
+        p.name: (p.compute_slices, p.mem_units, p.starts)
+        for p in DEFAULT_SKU.profiles
+    } == want
+    assert DEFAULT_SKU.profile_order == (
+        "1g.5gb", "2g.10gb", "3g.20gb", "4g.20gb", "7g.40gb"
+    )
+    assert DEFAULT_SKU.full_profile == "7g.40gb"
+    assert DEFAULT_SKU.exclusions == (frozenset({"4g.20gb", "3g.20gb"}),)
+
+
+def test_placement_span_shim_and_per_sku_geometry():
+    # the old Placement.span behaviour (default-SKU lookup) still works
+    assert Placement("3g.20gb", 4).span == (4, 8)
+    # a foreign profile name needs its owning SKU's geometry
+    with pytest.raises(KeyError, match="a100-40gb"):
+        Placement("2g.12gb", 2).span
+    a30 = SKUS["a30-24gb"]
+    assert a30.span(Placement("2g.12gb", 2)) == (2, 4)
+    assert a30.units(Placement("4g.24gb", 0)) == frozenset(range(4))
+
+
+def test_sku_constructor_rejects_malformed_trees():
+    one = InstanceProfile("1g.1gb", 1, 1, (0,))
+    with pytest.raises(ValueError, match="full profile must own"):
+        DeviceSKU("bad", 2, 2, 1, profiles=(one,), full_profile="1g.1gb")
+    with pytest.raises(ValueError, match="overflows"):
+        DeviceSKU(
+            "bad2", 2, 2, 1,
+            profiles=(InstanceProfile("2g.2gb", 2, 2, (1,)),),
+            full_profile="2g.2gb",
+        )
+
+
+# -- per-SKU layout algebra + enumeration invariants -----------------------------
+
+
+@pytest.mark.parametrize("name", ALL_SKUS)
+def test_full_profile_owns_the_device_and_homogeneous_layouts_validate(name):
+    sku = SKUS[name]
+    full = sku.profile(sku.full_profile)
+    assert full.mem_units == sku.n_units
+    for p in sku.profiles:
+        layout = sku.homogeneous_layout(p.name)
+        ok, why = sku.validate_layout(layout)
+        assert ok, f"{name}/{p.name}: {why}"
+
+
+@pytest.mark.parametrize("name", ALL_SKUS)
+def test_enumeration_disjoint_budget_and_counts(name):
+    sku = SKUS[name]
+    configs = enumerate_configs(sku=sku)
+    assert (len(configs), len(maximal_configs(sku=sku))) == TREE_SIZES[name]
+    seen = set()
+    for cfg in configs:
+        key = tuple((pl.start, pl.profile) for pl in cfg)
+        assert key not in seen, f"duplicate config {key}"
+        seen.add(key)
+        # disjoint spans (the partitioner's verify_disjoint invariant)
+        spans = sorted(sku.span(pl) for pl in cfg)
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert b0 >= a1, f"{name}: overlap in {cfg}"
+        # compute-slice budget
+        used = sum(sku.profile(pl.profile).compute_slices for pl in cfg)
+        assert used <= sku.n_compute_slices
+        # exclusions honoured
+        names = {pl.profile for pl in cfg}
+        for bad in sku.exclusions:
+            assert not bad <= names
+
+
+@pytest.mark.parametrize("name", ALL_SKUS)
+def test_enumeration_is_deterministic_and_memo_keyed_per_sku(name):
+    sku = SKUS[name]
+    first = enumerate_configs(sku=sku)
+    assert enumerate_configs(sku=sku) is first  # memo hit
+    # an equal-but-rebuilt descriptor hashes to the same memo entry
+    clone = DeviceSKU(**{
+        f.name: getattr(sku, f.name)
+        for f in type(sku).__dataclass_fields__.values()
+    })
+    assert enumerate_configs(sku=clone) == first
+
+
+def test_h100_1g20gb_is_why_its_tree_is_bigger():
+    """The Hopper-only double-width 1g.20gb profile is what inflates the
+    h100 tree past the a100-80gb's (same ladder otherwise)."""
+    h100, a80 = SKUS["h100-80gb"], SKUS["a100-80gb"]
+    only_h = {p.name for p in h100.profiles} - {p.name for p in a80.profiles}
+    assert only_h == {"1g.20gb"}
+    assert len(enumerate_configs(sku=h100)) > len(enumerate_configs(sku=a80))
+
+
+# -- memo-key isolation between generations --------------------------------------
+
+
+def _db(sku_name):
+    from repro.launch.simulate import synthetic_char_db
+
+    return synthetic_char_db(sku=sku_name)
+
+
+def test_predict_step_and_solo_profile_caches_carry_the_sku():
+    """Satellite: two SKUs can't cross-contaminate the scheduler's memo.
+
+    a100-80gb and h100-80gb share profile *names* (2g.20gb, 7g.80gb), so
+    without the SKU in the key a scheduler re-homed onto the other
+    generation would serve the stale generation's step time bit-for-bit.
+    """
+    from repro.launch.simulate import SIM_SUITE
+
+    job = JobSpec("j", "llama3-8b", SIM_SUITE)
+    sched = CollocationScheduler(_db("a100-80gb"), sku="a100-80gb")
+    step_a = sched.predict_step(job, "2g.20gb")
+    solo_a = sched.solo_profile(job)
+    # re-home onto the H100: same profile names, different silicon
+    # (2x compute_scale, lower latency floor)
+    sched.sku = get_sku("h100-80gb")
+    sched.char_db = _db("h100-80gb")
+    sched._cost_model = None
+    step_h = sched.predict_step(job, "2g.20gb")
+    solo_h = sched.solo_profile(job)
+    assert step_h != step_a  # a stale cache hit would make these equal
+    assert step_h < step_a  # the H100 is the faster part
+    assert solo_h.latency_s != solo_a.latency_s
+    # ...and coming home again still serves the original values
+    sched.sku = get_sku("a100-80gb")
+    sched.char_db = _db("a100-80gb")
+    sched._cost_model = None
+    assert sched.predict_step(job, "2g.20gb") == step_a
+
+
+def test_foreign_min_profile_floor_does_not_bind_or_crash():
+    """A straggler-repack floor names one generation's profile; retried on
+    another generation's tree (mixed fleet) it must neither crash nor
+    block placement."""
+    from repro.launch.simulate import SIM_SUITE
+
+    job = JobSpec("j", "granite-3-2b", SIM_SUITE, min_profile="2g.10gb")
+    a30 = CollocationScheduler(_db("a30-24gb"), sku="a30-24gb")
+    assert a30.smallest_admissible(job) == "1g.6gb"  # floor is foreign here
+    default = CollocationScheduler(_db("a100-40gb"))
+    assert default.smallest_admissible(job) == "2g.10gb"  # floor binds
+
+
+def test_planning_cost_model_estimates_are_per_sku():
+    from repro.core.planner import PlanningCostModel
+    from repro.launch.simulate import SIM_SUITE
+
+    job = JobSpec("j", "llama3-8b", SIM_SUITE)
+    est_a = PlanningCostModel(_db("a100-80gb"), sku="a100-80gb").estimate(
+        job, "2g.20gb"
+    )
+    est_h = PlanningCostModel(_db("h100-80gb"), sku="h100-80gb").estimate(
+        job, "2g.20gb"
+    )
+    assert est_a.fits and est_h.fits
+    assert est_h.step_s < est_a.step_s
+
+
+# -- admission messages use the one GiB formatter --------------------------------
+
+
+def test_admission_messages_quote_the_skus_actual_budget():
+    from repro.launch.simulate import SIM_SUITE
+
+    sched = CollocationScheduler(_db("a100-40gb"))
+    big = JobSpec("big", "qwen2-72b", SIM_SUITE)
+    ok, msg = sched.admissible(big, "1g.5gb")
+    assert not ok
+    assert f"> {format_gib(DEFAULT_SKU.slice_bytes)} GiB HBM" in msg
+    # the serve session (halved working set) is admitted by the 80GB
+    # generation's full slice — and only there
+    from repro.core.workload import serve_workload
+    from repro.launch.simulate import SERVE_SLO_S, SERVE_SUITE
+
+    serve = serve_workload(
+        "bigserve", "qwen2-72b", SERVE_SUITE,
+        slo_step_s=SERVE_SLO_S["qwen2-72b"], prefill_steps=4,
+    )
+    sched80 = CollocationScheduler(_db("a100-80gb"), sku="a100-80gb")
+    assert sched80.admissible(serve, "7g.80gb")[0]
+    assert not sched80.admissible(serve, "3g.40gb")[0]
+    assert not sched.admissible(serve, "7g.40gb")[0]
+    # shared-mode aggregate rejection quotes the same formatter
+    many = [JobSpec(f"m{i}", "resnet_large", SIM_SUITE) for i in range(4)]
+    shared = sched.schedule(many, mode=CollocationMode.MPS)
+    agg = [r for r in shared.rejections if "shared HBM" in r.reason]
+    assert agg and f"> {format_gib(DEFAULT_SKU.slice_bytes)} GiB" in agg[0].reason
+
+
+# -- the hetero_sku scenario ------------------------------------------------------
+
+
+def test_hetero_cluster_routes_each_job_to_the_tree_that_fits():
+    """The queue — not the operator — drains jobs onto whichever
+    generation admits them; the big-memory serve session lands only on
+    the 80GB device, and 40GB/24GB-only fleets reject it outright."""
+    from repro.core.cluster import Cluster
+    from repro.core.workload import serve_workload
+    from repro.launch.simulate import (
+        HETERO_FLEET_SKUS,
+        SERVE_SLO_S,
+        SERVE_SUITE,
+        synthetic_sku_dbs,
+    )
+
+    def big_serve(name):
+        return serve_workload(
+            name, "qwen2-72b", SERVE_SUITE,
+            slo_step_s=SERVE_SLO_S["qwen2-72b"], prefill_steps=4, priority=1,
+        )
+
+    dbs = synthetic_sku_dbs(HETERO_FLEET_SKUS)
+    devices = [
+        (f"d{i}", CollocationMode.MIG, HETERO_FLEET_SKUS[i]) for i in range(3)
+    ]
+    cl = Cluster(dbs, devices)
+    cl.submit(big_serve("hx0"), 0.0)
+    cl.tick()  # process the arrival
+    placed_on = {
+        d.sku.name for d in cl.devices.values() if "hx0" in d.assignments
+    }
+    assert placed_on == {"a100-80gb"}
+    report = cl.run()
+    assert report.completed == 1 and report.rejected == 0
+    assert report.slo_attainment == 1.0  # isolated 80GB slice meets the SLO
+
+    for lone in ("a100-40gb", "a30-24gb"):
+        cl1 = Cluster(
+            synthetic_sku_dbs((lone,)),
+            [("d0", CollocationMode.MIG, lone)],
+        )
+        cl1.submit(big_serve("hx1"), 0.0)
+        cl1.tick()
+        assert cl1.rejected and "OOM" in cl1.rejected[0][1]
+
+
+def test_hetero_sku_seed0_cells_are_byte_deterministic():
+    """Satellite: the seed-0 hetero_sku simulation is reproducible to the
+    byte — same dict, same JSON serialization, across two full runs."""
+    from repro.launch.simulate import _rounded, run_cell
+
+    kw = dict(seed=0, n_jobs=24, n_devices=3)
+    a = run_cell("hetero_sku", "all-mig", **kw)
+    b = run_cell("hetero_sku", "all-mig", **kw)
+    ja = json.dumps(_rounded(a), indent=2, sort_keys=True)
+    jb = json.dumps(_rounded(b), indent=2, sort_keys=True)
+    assert ja == jb
+    assert a["fleet_skus"] == ["a100-40gb", "a100-80gb", "a30-24gb"]
+    assert a["report"]["rejected"] == 0
+    assert a["report"]["completed"] == a["n_jobs"]
+    # device rows of non-default generations carry their SKU
+    dev_skus = {d.get("sku", "a100-40gb") for d in a["report"]["devices"]}
+    assert dev_skus == set(a["fleet_skus"])
+
+
+def test_reconfig_downtime_scales_with_the_device_generation():
+    """The SKU's reconfig knob composes with the cluster's configured
+    cost: an H100 re-partitions at 1.5/2.0 of the baseline downtime, the
+    default SKU at exactly the configured cost (byte-compat)."""
+    from repro.core.cluster import Cluster
+
+    cl = Cluster(
+        {"a100-40gb": _db("a100-40gb"), "h100-80gb": _db("h100-80gb")},
+        [("d0", CollocationMode.MIG, "h100-80gb"),
+         ("d1", CollocationMode.MIG, "a100-40gb")],
+        reconfig_cost_s=2.0,
+    )
+    assert cl._device_reconfig_cost(cl.devices["d0"]) == 1.5
+    assert cl._device_reconfig_cost(cl.devices["d1"]) == 2.0
+
+
+def test_flat_measured_db_is_rejected_for_non_default_fleets():
+    from repro.launch.simulate import run_cell, synthetic_char_db
+
+    with pytest.raises(ValueError, match="flat characterization DB"):
+        run_cell(
+            "hetero_sku", "all-mig", seed=0, n_jobs=4, n_devices=3,
+            char_db=synthetic_char_db(),
+        )
+
+
+def test_default_sku_cell_schema_is_unchanged():
+    """The a100-40gb compatibility contract: default-SKU cells carry no
+    new keys, so pre-device-model artifacts stay byte-identical."""
+    from repro.launch.simulate import run_cell
+
+    cell = run_cell("aligned_static", "all-mig", seed=0, n_jobs=4, n_devices=1)
+    assert "sku" not in cell and "fleet_skus" not in cell
+    assert all("sku" not in d for d in cell["report"]["devices"])

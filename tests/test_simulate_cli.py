@@ -48,7 +48,55 @@ def test_list_prints_every_scenario_and_fleet_and_exits_zero(capsys):
         assert name in out
     for name in simulate.POLICIES:
         assert name in out
+    for name in simulate.SKUS:  # device generations (core/device.py)
+        assert name in out
     assert "scenarios:" in out and "fleet policies:" in out
+    assert "device SKUs:" in out and "(default)" in out
     # helps stay in sync: every registered name has a help line
     assert set(simulate.SCENARIO_HELP) == set(simulate.SCENARIOS)
     assert set(simulate.POLICY_HELP) == set(simulate.POLICIES)
+
+
+def test_db_flag_skips_hetero_sku_instead_of_failing(tmp_path, capsys):
+    """A flat measured DB (--db) cannot price the mixed-generation fleet;
+    the hetero_sku scenario must be a documented skip, not a failed cell
+    that flips the whole run's exit code."""
+    import json
+
+    db = simulate.synthetic_char_db()
+    cell = {
+        "mode": "mig",
+        "records": [
+            {"arch": a, "shape": sh, "profile": p, **rec}
+            for (a, sh, p), rec in db.items()
+        ],
+    }
+    (tmp_path / "fake.json").write_text(json.dumps(cell))
+    rc = simulate.main([
+        "--steps", "4", "--seed", "0",
+        "--scenarios", "aligned_static,hetero_sku",
+        "--policies", "all-mig",
+        "--out", str(tmp_path / "out"), "--db", str(tmp_path),
+    ])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "[SKIP] hetero_sku" in out and "[FAIL]" not in out
+    summary = json.loads((tmp_path / "out" / "_summary.json").read_text())
+    assert summary["failures"] == 0
+    assert {c["scenario"] for c in summary["cells"]} == {"aligned_static"}
+
+
+def test_db_flag_rejects_non_default_sku(capsys):
+    with pytest.raises(SystemExit) as exc:
+        simulate.main(["--db", "/nonexistent", "--sku", "a100-80gb"])
+    assert exc.value.code == 2
+    assert "a100-40gb profile names only" in capsys.readouterr().err
+
+
+def test_unknown_sku_errors_with_choices(capsys):
+    with pytest.raises(SystemExit) as exc:
+        simulate.main(["--sku", "v100-16gb"])
+    assert exc.value.code == 2  # argparse choices error, not a traceback
+    err = capsys.readouterr().err
+    for known in simulate.SKUS:
+        assert known in err
