@@ -1,0 +1,289 @@
+"""Simulator perf scoreboard: events/sec, peak queue depth, and wall-clock
+per city-scale scenario cell, written to ``BENCH_simperf.json`` at the repo
+root so PRs have a trajectory to move (ROADMAP: "Simulator raw speed +
+million-event traces").
+
+Each cell drives the discrete-event cluster (core/cluster.py) over one of
+the ``city_scale`` trace families (launch/simulate.py: ``city_diurnal``,
+``city_burst``) at a scale the default artifact grid never reaches —
+10^4-10^6 arrivals over tens to hundreds of devices. The emitted document
+separates what must reproduce from what may not:
+
+  ``determinism``  per-cell event/queue/re-timing counters, completion
+                   totals, the makespan, and a sha256 fingerprint of the
+                   rounded cluster report — byte-identical across runs on
+                   any machine (the CI gate strips the volatile keys with
+                   :func:`strip_volatile` and asserts exactly this);
+  ``perf``         wall-clock seconds and events/sec — the scoreboard
+                   numbers, machine-dependent by nature.
+
+``--quick`` (the CI mode) runs the three smallest cells — still including
+a 10^5-arrival trace — in about a minute; the full run adds the 10^6-event
+cells. ``tests/test_sim_perf_smoke.py`` guards the trajectory with a
+relative, per-machine-normalized check against the committed
+``benchmarks/sim_perf_baseline.json`` (see :func:`machine_calibration`).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sim_perf [--quick] [--seed 0]
+        [--retime incremental|full] [--out BENCH_simperf.json]
+        [--cells name[,name...]] [--write-baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import heapq
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import Column, format_table
+from repro.core.cluster import Cluster
+from repro.launch.simulate import (
+    SIM_SAMPLES_PER_EPOCH,
+    _rounded,
+    make_fleet,
+    make_trace,
+    synthetic_sku_dbs,
+)
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = ROOT / "BENCH_simperf.json"
+BASELINE_PATH = ROOT / "benchmarks" / "sim_perf_baseline.json"
+SCHEMA = "sim_perf/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class SimPerfCell:
+    """One scoreboard cell: a (scenario, policy) pair at a fixed scale."""
+
+    name: str
+    scenario: str
+    policy: str
+    n_jobs: int
+    n_devices: int
+
+
+#: CI's quick set: the steady diurnal stream on a 200-device fleet, the
+#: burst stressor on a deliberately under-provisioned MIG fleet (that is
+#: what drives ``peak_queue_depth``), and the 10^5-arrival acceptance cell.
+QUICK_CELLS = (
+    SimPerfCell("city_diurnal_25k", "city_diurnal", "all-mps", 25_000, 200),
+    SimPerfCell("city_burst_25k", "city_burst", "all-mig", 25_000, 8),
+    SimPerfCell("city_diurnal_100k", "city_diurnal", "all-mps", 100_000, 240),
+)
+#: The full scoreboard adds the million-event tier.
+FULL_CELLS = QUICK_CELLS + (
+    SimPerfCell("city_burst_200k", "city_burst", "all-mps", 200_000, 96),
+    SimPerfCell("city_diurnal_300k", "city_diurnal", "all-mig", 300_000, 320),
+)
+
+#: The downsized cell the perf smoke test (and ``--write-baseline``) runs —
+#: small enough for the test suite, same code paths as the big cells.
+SMOKE_CELL = SimPerfCell("smoke_city_diurnal_2k", "city_diurnal", "all-mps", 2_000, 16)
+
+
+def run_perf_cell(
+    cell: SimPerfCell, *, seed: int = 0, retime: str = "incremental"
+) -> Dict:
+    """Run one cell and return its scoreboard row (see module docstring
+    for the determinism/perf split). The timed region is submit + run —
+    the event loop end to end — excluding trace generation."""
+    db = synthetic_sku_dbs(("a100-40gb",))
+    devices, cluster_policy = make_fleet(cell.policy, cell.n_devices)
+    trace = make_trace(cell.scenario, seed, cell.n_jobs, cell.n_devices)
+    cluster = Cluster(
+        db,
+        devices,
+        policy=cluster_policy,
+        reconfig_cost_s=0.5,
+        migration_cooldown_s=1.0,
+        retime=retime,
+    )
+    t0 = time.perf_counter()
+    for arrival_s, spec, epochs in trace:
+        cluster.submit(
+            spec, arrival_s, epochs=epochs, samples_per_epoch=SIM_SAMPLES_PER_EPOCH
+        )
+    report = cluster.run()
+    wall = time.perf_counter() - t0
+    events = cluster.perf["events_processed"]
+    fingerprint = hashlib.sha256(
+        json.dumps(_rounded(report.to_dict()), sort_keys=True).encode()
+    ).hexdigest()
+    return {
+        "name": cell.name,
+        "scenario": cell.scenario,
+        "policy": cell.policy,
+        "n_jobs": cell.n_jobs,
+        "n_devices": cell.n_devices,
+        "retime": retime,
+        "determinism": {
+            "events_processed": events,
+            "arrivals": len(trace),
+            "completed": report.completed,
+            "rejected": report.rejected,
+            "phase_transitions": report.phase_transitions,
+            "peak_queue_depth": cluster.queue.peak_depth,
+            "hol_blocked_events": cluster.queue.hol_blocked_events,
+            "retime_requests": cluster.perf["retime_requests"],
+            "retime_flushes": cluster.perf["retime_flushes"],
+            "retime_batched": cluster.perf["retime_batched"],
+            "retime_jobs_repriced": cluster.perf["retime_jobs_repriced"],
+            "shared_steps_hits": cluster.perf["shared_steps_hits"],
+            "shared_steps_misses": cluster.perf["shared_steps_misses"],
+            "dispatch_full_scans": cluster.perf["dispatch_full_scans"],
+            "dispatch_fast_scans": cluster.perf["dispatch_fast_scans"],
+            "heap_compactions": cluster.events.compactions,
+            "makespan_s": round(report.makespan_s, 9),
+            "report_sha256": fingerprint,
+        },
+        "perf": {
+            "wall_s": round(wall, 3),
+            "events_per_s": round(events / wall, 1) if wall > 0 else 0.0,
+        },
+    }
+
+
+def machine_calibration(n: int = 200_000) -> float:
+    """Operations/sec of a fixed synthetic heap+dict workload — the
+    per-machine speed unit the smoke test normalizes events/sec by, so the
+    committed baseline carries no absolute wall-clock assumption."""
+    t0 = time.perf_counter()
+    h: List = []
+    d: Dict[int, int] = {}
+    for i in range(n):
+        k = (i * 2654435761) % 1000003
+        heapq.heappush(h, (k, i))
+        d[k] = i
+    while h:
+        d.pop(heapq.heappop(h)[0], None)
+    return n / (time.perf_counter() - t0)
+
+
+def strip_volatile(doc: Dict) -> Dict:
+    """The byte-reproducible projection of a scoreboard document: drop the
+    machine-dependent keys (per-cell ``perf``, top-level ``machine``) —
+    what CI compares across two runs."""
+    return {
+        **{k: v for k, v in doc.items() if k != "machine"},
+        "cells": [
+            {k: v for k, v in c.items() if k != "perf"} for c in doc["cells"]
+        ],
+    }
+
+
+_COLUMNS = (
+    Column("name", width=22, align="<"),
+    Column("n_jobs", "arrivals", "{:d}", 9),
+    Column("n_devices", "devices", "{:d}", 9),
+    Column("events", width=9, fmt="{:d}"),
+    Column("peak_queue_depth", "peakq", "{:d}", 7),
+    Column("wall_s", "wall_s", "{:.2f}", 9),
+    Column("events_per_s", "events/s", "{:.0f}", 10),
+)
+
+
+def _table_row(row: Dict) -> Dict:
+    return {
+        "name": row["name"],
+        "n_jobs": row["n_jobs"],
+        "n_devices": row["n_devices"],
+        "events": row["determinism"]["events_processed"],
+        "peak_queue_depth": row["determinism"]["peak_queue_depth"],
+        "wall_s": row["perf"]["wall_s"],
+        "events_per_s": row["perf"]["events_per_s"],
+    }
+
+
+def write_baseline(path: Path = BASELINE_PATH, *, seed: int = 0) -> Dict:
+    """(Re)generate the committed smoke-test baseline: the smoke cell's
+    events/sec divided by :func:`machine_calibration` ops/sec — a pure
+    ratio, portable across machines."""
+    calib = machine_calibration()
+    row = run_perf_cell(SMOKE_CELL, seed=seed)
+    doc = {
+        "schema": SCHEMA,
+        "cell": SMOKE_CELL.name,
+        "seed": seed,
+        "events_per_s_normalized": round(row["perf"]["events_per_s"] / calib, 6),
+        "note": "events/sec of the smoke cell divided by the synthetic "
+                "heap-workload calibration ops/sec on the machine that "
+                "wrote this file (benchmarks/sim_perf.py --write-baseline)",
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return doc
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__ and __doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: the three smallest cells (still includes "
+                         "a 10^5-arrival trace)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--retime", default="incremental",
+                    choices=("incremental", "full"),
+                    help="which re-pricing engine to score (full is the "
+                         "reference path — useful for before/after columns)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="scoreboard path (default: BENCH_simperf.json at "
+                         "the repo root)")
+    ap.add_argument("--cells", default=None,
+                    help="comma-separated cell names to run (default: the "
+                         "selected mode's full set)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="also refresh benchmarks/sim_perf_baseline.json "
+                         "(the perf smoke test's committed reference)")
+    args = ap.parse_args(argv)
+
+    cells = QUICK_CELLS if args.quick else FULL_CELLS
+    if args.cells:
+        wanted = [c.strip() for c in args.cells.split(",") if c.strip()]
+        by_name = {c.name: c for c in FULL_CELLS}
+        unknown = [w for w in wanted if w not in by_name]
+        if unknown:
+            ap.error(
+                f"unknown cell(s): {', '.join(unknown)} "
+                f"(choose from: {', '.join(by_name)})"
+            )
+        cells = tuple(by_name[w] for w in wanted)
+
+    rows = []
+    for cell in cells:
+        row = run_perf_cell(cell, seed=args.seed, retime=args.retime)
+        rows.append(row)
+        r = _table_row(row)
+        print(
+            f"[OK] {r['name']:<22} arrivals={r['n_jobs']:>7} "
+            f"devices={r['n_devices']:>3} events={r['events']:>8} "
+            f"peakq={r['peak_queue_depth']:>5} wall={r['wall_s']:>8.2f}s "
+            f"events/s={r['events_per_s']:>9.0f}",
+            flush=True,
+        )
+
+    doc = {
+        "schema": SCHEMA,
+        "mode": "quick" if args.quick else "full",
+        "seed": args.seed,
+        "retime": args.retime,
+        "cells": rows,
+    }
+    Path(args.out).write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print()
+    print(format_table(_COLUMNS, [_table_row(r) for r in rows], style="fixed"))
+    print(f"\nwrote {args.out}")
+
+    if args.write_baseline:
+        base = write_baseline(seed=args.seed)
+        print(
+            f"wrote {BASELINE_PATH} "
+            f"(normalized={base['events_per_s_normalized']:.6f})"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

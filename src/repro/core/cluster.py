@@ -94,9 +94,21 @@ from repro.core.device import DEFAULT_RECONFIG_COST_S as _BASE_RECONFIG_COST_S
 from repro.core.elastic import REQUEUE_PRIORITY_BUMP, split_by_failure
 from repro.core.events import Event, EventKind, EventQueue
 from repro.core.instance import JobSpec
-from repro.core.queueing import AdmissionQueue
-from repro.core.sharing import CollocationMode, device_busy_fraction
-from repro.core.workload import PhaseSpan, Workload, as_workload, span_at
+from repro.core.profiles import Placement
+from repro.core.queueing import AdmissionQueue, QueueEntry
+from repro.core.sharing import (
+    CollocationMode,
+    busy_fraction_from_terms,
+    device_busy_fraction,
+    shared_effective_steps,
+)
+from repro.core.workload import (
+    PhaseSpan,
+    Workload,
+    as_workload,
+    peak_demand_multiplier,
+    span_at,
+)
 
 # Live re-partitioning penalty: drain + MIG instance destroy/create + MPS
 # daemon restart + checkpoint restore of the displaced jobs. Charged per
@@ -142,6 +154,7 @@ class ClusterJob:
     slo_steps: float = 0.0  # latency-sensitive steps executed (serve)
     slo_met_steps: float = 0.0  # of those, steps whose step_s met the SLO
     token: int = 0  # completion-event generation (lazy invalidation)
+    pending_event: Optional[Event] = None  # in-heap lifecycle event, if any
     rejected_reason: Optional[str] = None
 
     @property
@@ -332,15 +345,27 @@ class Cluster:
         migration_hysteresis: float = 0.10,
         migration_window: int = 8,
         scheduler_kwargs: Optional[Dict] = None,
+        retime: str = "incremental",
     ):
         """``devices`` entries are ``(name, mode)`` — the default SKU — or
         ``(name, mode, sku)`` for a heterogeneous-generation fleet
         (core/device.py). ``char_db`` is a flat characterization DB shared
         by every device, or — since a char DB speaks one SKU's profile
-        names — a ``{sku_name: db}`` mapping for mixed fleets."""
+        names — a ``{sku_name: db}`` mapping for mixed fleets.
+
+        ``retime`` selects the shared-device re-pricing engine:
+        ``"incremental"`` (default) batches same-timestamp re-timings,
+        serves contention steps from a composition memo, and skips
+        admission-queue scans that cannot succeed; ``"full"`` re-runs the
+        complete scheduling model on every event — the reference path the
+        equivalence suite (tests/test_retime_equivalence.py) holds the
+        fast one byte-identical to."""
         if policy not in ("static", "adaptive", "planner"):
             raise ValueError(f"unknown policy {policy!r}")
+        if retime not in ("incremental", "full"):
+            raise ValueError(f"unknown retime mode {retime!r}")
         self.policy = policy
+        self.retime = retime
         self.reconfig_cost_s = float(reconfig_cost_s)
         self.migration_cooldown_s = float(migration_cooldown_s)
         self.migration_hysteresis = float(migration_hysteresis)
@@ -380,6 +405,43 @@ class Cluster:
         self.rejected: List[Tuple[str, str]] = []
         self.migration_events: List[Dict] = []
         self.failure_events: List[Dict] = []
+        # -- incremental re-timing state -----------------------------------
+        # devices whose shared co-resident set changed at _dirty_t and have
+        # not been re-priced yet (all marks in one batch share a timestamp;
+        # the flush points guarantee a flush before any later event)
+        self._dirty: Dict[str, float] = {}
+        self._dirty_t = 0.0
+        # effective-step memo per (mode, sku, ordered co-resident terms key)
+        self._shared_steps_cache: Dict[Tuple, Tuple[float, ...]] = {}
+        self._busy_cache: Dict[Tuple, float] = {}
+        self._unplaceable_cache: Dict[Tuple, Optional[str]] = {}
+        self._trial_reps: Optional[
+            List[Tuple[CollocationScheduler, Tuple[CollocationMode, ...]]]
+        ] = None
+        # dispatch skip-scan: capacity only shrinks between these epoch
+        # bumps, so entries that failed a full scan stay blocked until one
+        self._capacity_epoch = 0
+        self._blocked_epoch: Optional[int] = None
+        self._blocked_keys: Set[str] = set()
+        self._blocked_floor_key: Optional[Tuple] = None
+        self._pending_entries: List[QueueEntry] = []
+        self._next_reopen = float("inf")
+        # set to a list to record the live event stream (time, kind,
+        # payload-sans-token) — the equivalence harness's comparison hook
+        self.event_log: Optional[List[Tuple]] = None
+        # instrumentation the perf suite reads (NOT part of the report —
+        # the report schema is pinned by the artifact byte-compat contract)
+        self.perf: Dict[str, int] = {
+            "events_processed": 0,
+            "retime_requests": 0,
+            "retime_flushes": 0,
+            "retime_jobs_repriced": 0,
+            "retime_batched": 0,
+            "shared_steps_hits": 0,
+            "shared_steps_misses": 0,
+            "dispatch_full_scans": 0,
+            "dispatch_fast_scans": 0,
+        }
 
     # -- trace input -----------------------------------------------------------
 
@@ -421,12 +483,23 @@ class Cluster:
     # -- event loop --------------------------------------------------------------
 
     def tick(self) -> Optional[Event]:
-        """Process the next event; returns it (None if the heap is empty)."""
+        """Process the next event; returns it (None if the heap is empty).
+
+        Deferred shared re-pricings (the incremental engine's same-timestamp
+        batch) are flushed before popping a strictly later event and again
+        before control returns, so code stepping tick-by-tick always sees a
+        consistent cluster between calls — only *within* a same-time run of
+        events can step times be momentarily stale, which is exactly the
+        window the full path's redundant intermediate re-timings occupy."""
+        self._flush_if_due()
         if not self.events:
             return None
         ev = self.events.pop()
         self.now = max(self.now, ev.time_s)
+        self.perf["events_processed"] += 1
         t = ev.time_s
+        if self.event_log is not None:
+            self._log_event(ev)
         if ev.kind == EventKind.ARRIVAL:
             self._on_arrival(ev.payload[0], t)
         elif ev.kind == EventKind.COMPLETION:
@@ -439,20 +512,66 @@ class Cluster:
             self._on_failure(ev.payload[0], ev.payload[1], t)
         elif ev.kind == EventKind.REPAIR:
             self._on_repair(ev.payload[0], ev.payload[1], t)
+        self._flush_if_due()
         return ev
 
+    def _flush_if_due(self) -> None:
+        """Flush deferred re-pricings unless the next event shares their
+        timestamp (then the batch is still open — flushing now would do
+        work the rest of the same-time run immediately invalidates)."""
+        if self._dirty:
+            nt = self.events.peek_time()
+            if nt is None or nt > self._dirty_t:
+                self._flush_retimes()
+
     def run_until(self, t_end: float) -> None:
-        while self.events and self.events.peek_time() <= t_end:
+        while True:
+            if self._dirty:
+                nt = self.events.peek_time()
+                if nt is None or nt > self._dirty_t:
+                    self._flush_retimes()
+                    continue  # the flush may schedule events <= t_end
+            nt = self.events.peek_time()
+            if nt is None or nt > t_end:
+                break
             self.tick()
         self.now = max(self.now, t_end)
 
     def run(self) -> "ClusterReport":
         """Drain every event and return the end-of-run report."""
-        while self.events:
+        while self.events or self._dirty:
             self.tick()
         return self.report()
 
+    def _log_event(self, ev: Event) -> None:
+        """Append the event to ``event_log`` if it is *live* — the stream
+        both re-timing engines must agree on. Stale (token-mismatched)
+        lifecycle events are omitted: the full path pops and drops them,
+        the incremental path tombstones them before they surface; and the
+        token itself is stripped from the payload because it counts
+        re-timings, which is precisely what the engines do differently."""
+        payload = ev.payload
+        if ev.kind in (EventKind.COMPLETION, EventKind.PHASE_TRANSITION):
+            dev_name, name, token = payload
+            cj = self.jobs.get(name)
+            dev = self.devices.get(dev_name)
+            if (
+                cj is None
+                or dev is None
+                or cj.token != token
+                or name not in dev.running
+            ):
+                return
+            payload = (dev_name, name)
+        self.event_log.append((round(ev.time_s, 9), ev.kind.value, payload))
+
     # -- handlers ---------------------------------------------------------------
+
+    def _enqueue(self, name: str, cj: ClusterJob, t: float) -> None:
+        """Queue a job for dispatch, remembering the entry as a fresh
+        placement candidate for the skip-scan dispatcher."""
+        e = self.queue.push(name, cj, priority=cj.spec.priority, enqueued_s=t)
+        self._pending_entries.append(e)
 
     def _on_arrival(self, name: str, t: float) -> None:
         cj = self.jobs[name]
@@ -461,7 +580,7 @@ class Cluster:
             cj.rejected_reason = reason
             self.rejected.append((name, reason))
             return
-        self.queue.push(name, cj, priority=cj.spec.priority, enqueued_s=t)
+        self._enqueue(name, cj, t)
         self._dispatch(t)
         self._maybe_migrate(t)
 
@@ -470,6 +589,7 @@ class Cluster:
         cj = self.jobs[name]
         if cj.token != token or name not in dev.running:
             return  # stale event — the job was re-timed, migrated, or killed
+        cj.pending_event = None  # this event; it just left the heap
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
         cj.steps_done = float(cj.total_steps)  # clamp fp residue
@@ -478,6 +598,7 @@ class Cluster:
         del dev.running[name]
         del dev.assignments[name]
         self.completed.append(name)
+        self._capacity_epoch += 1
         if dev.mode != CollocationMode.MIG and dev.running:
             # a departure lowers the contention factors for every neighbour
             self._retime_shared(dev, t)
@@ -491,6 +612,7 @@ class Cluster:
         cj = self.jobs[name]
         if cj.token != token or name not in dev.running:
             return  # stale event — the job was re-timed, migrated, or killed
+        cj.pending_event = None  # this event; it just left the heap
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
         # snap fp residue onto the integer boundary the event fired for, so
@@ -522,6 +644,7 @@ class Cluster:
             dev.scheduler.mode = dev.pending_mode
             dev.pending_mode = None
             dev.mode_history.append((t, dev.mode.value))
+        self._capacity_epoch += 1  # the device re-opened
         self._dispatch(t)
 
     def _on_failure(self, dev_name: str, units: Sequence[int], t: float) -> None:
@@ -529,6 +652,8 @@ class Cluster:
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
         dev.failed_units |= set(units)
+        self._capacity_epoch += 1
+        self._dirty.pop(dev.name, None)  # a pending re-price of the dead set
         if dev.mode == CollocationMode.MIG:
             killed_specs, survivors = split_by_failure(
                 list(dev.assignments.values()), dev.failed_units, dev.sku
@@ -563,6 +688,7 @@ class Cluster:
         dev = self.devices[dev_name]
         self._accrue_busy(dev, t)
         dev.failed_units -= set(units)
+        self._capacity_epoch += 1
         self._dispatch(t)
         self._maybe_migrate(t)
 
@@ -577,32 +703,109 @@ class Cluster:
         reachable (SKU, mode) pair instead of one per device: the first
         device of each SKU stands in for its generation. A mixed fleet is
         the point: a big-memory job unplaceable on every 40GB tree waits
-        for (or lands on) the 80GB devices instead of being rejected."""
-        reps: Dict[str, CollocationScheduler] = {}
-        sku_modes: Dict[str, Tuple[CollocationMode, ...]] = {}
-        for d in self.devices.values():
-            if d.sku.name not in reps:
-                reps[d.sku.name] = d.scheduler
-                sku_modes[d.sku.name] = ()
-            if self.policy == "adaptive":
-                sku_modes[d.sku.name] = tuple(CollocationMode)
-            elif d.mode not in sku_modes[d.sku.name]:
-                sku_modes[d.sku.name] += (d.mode,)
+        for (or lands on) the 80GB devices instead of being rejected.
+
+        The verdict depends only on (arch, shape, repack floor, phase-peak
+        multiplier) — the fleet's reachable (SKU, mode) pairs are fixed for
+        a run under every policy (static/planner modes never change;
+        adaptive trials all modes regardless) — so the incremental engine
+        memoizes it per that key: a 10^5-arrival trace drawing from a
+        handful of registry shapes pays for the trial schedules once."""
+        if self.retime == "incremental":
+            key = (
+                spec.arch,
+                spec.suite.name,
+                getattr(spec, "min_profile", None),
+                peak_demand_multiplier(spec),
+            )
+            if key not in self._unplaceable_cache:
+                self._unplaceable_cache[key] = self._unplaceable_scan(spec)
+            return self._unplaceable_cache[key]
+        return self._unplaceable_scan(spec)
+
+    def _unplaceable_scan(self, spec: JobSpec) -> Optional[str]:
+        if self._trial_reps is None:
+            reps: Dict[str, CollocationScheduler] = {}
+            sku_modes: Dict[str, Tuple[CollocationMode, ...]] = {}
+            for d in self.devices.values():
+                if d.sku.name not in reps:
+                    reps[d.sku.name] = d.scheduler
+                    sku_modes[d.sku.name] = ()
+                if self.policy == "adaptive":
+                    sku_modes[d.sku.name] = tuple(CollocationMode)
+                elif d.mode not in sku_modes[d.sku.name]:
+                    sku_modes[d.sku.name] += (d.mode,)
+            self._trial_reps = [
+                (reps[sn], sku_modes[sn]) for sn in reps
+            ]
         last_reason = "no devices"
-        for sku_name, scheduler in reps.items():
-            for m in sku_modes[sku_name]:
-                trial = scheduler.schedule([spec], mode=m)
-                if trial.assignments:
-                    return None
-                if trial.rejections:
-                    last_reason = trial.rejections[0].reason
+        for scheduler, modes in self._trial_reps:
+            # trial schedules must not leave straggler predictions behind
+            # for jobs that were never deployed
+            snapshot = dict(scheduler._predicted)
+            try:
+                for m in modes:
+                    trial = scheduler.schedule([spec], mode=m)
+                    if trial.assignments:
+                        return None
+                    if trial.rejections:
+                        last_reason = trial.rejections[0].reason
+            finally:
+                scheduler._predicted = snapshot
         return f"unplaceable on any empty device: {last_reason}"
 
     def _dispatch(self, t: float) -> None:
         """Drain the admission queue: strict priority order with backfill —
-        a blocked high-priority job does not stop later entries that fit."""
+        a blocked high-priority job does not stop later entries that fit.
+
+        The incremental engine remembers the outcome: between capacity
+        epochs (completion / failure / repair / reconfiguration / displace)
+        placements only *shrink* capacity, and phase transitions never
+        change placeability (admission budgets the phase-peak working set,
+        a per-job constant) — so entries that failed the last full scan
+        must still fail, and only entries queued since then are tried."""
+        if self._dirty and self.queue:
+            # re-price before placing: the candidate admission below reads
+            # the co-resident sets the deferred re-timings are about to touch
+            self._flush_retimes()
+        if self.retime != "incremental":
+            self._dispatch_scan(t, self.queue.ordered())
+            return
+        if t >= self._next_reopen:
+            # a reconfiguring device re-opened purely by time passing (its
+            # RECONFIG_DONE shares this timestamp but may not have popped
+            # yet) — conservative: rescan everything
+            self._recompute_next_reopen(t)
+            self._blocked_epoch = None
+        if self._blocked_epoch == self._capacity_epoch:
+            self.perf["dispatch_fast_scans"] += 1
+            pending = [
+                e
+                for e in self._pending_entries
+                if self.queue.get(e.key) is e and e.key not in self._blocked_keys
+            ]
+            self._pending_entries = []
+            pending.sort(key=QueueEntry.sort_key)
+            self._dispatch_scan(t, pending, known_blocked=True)
+            return
+        self.perf["dispatch_full_scans"] += 1
+        self._pending_entries = []
+        self._blocked_keys = set()
+        self._blocked_floor_key = None
+        self._dispatch_scan(t, self.queue.ordered())
+        self._blocked_epoch = self._capacity_epoch
+
+    def _dispatch_scan(
+        self, t: float, entries: List[QueueEntry], *, known_blocked: bool = False
+    ) -> None:
+        """One in-order placement pass over ``entries``. With
+        ``known_blocked`` the pass is a fast scan over fresh candidates
+        only: previously blocked entries are not re-tried, but still count
+        as "an earlier entry is blocked" for backfill-overtake accounting
+        when they sort ahead of a candidate that places."""
         blocked_any = False
-        for entry in self.queue.ordered():
+        floor = self._blocked_floor_key
+        for entry in entries:
             cj = entry.item
             placed = False
             for dev in self.devices.values():
@@ -613,10 +816,27 @@ class Cluster:
                 self.queue.remove(entry.key)
                 if cj.started_s is None:
                     cj.started_s = t
-                if blocked_any:
+                if blocked_any or (
+                    known_blocked
+                    and floor is not None
+                    and floor < entry.sort_key()
+                ):
                     self.queue.note_backfill_overtake()
             else:
                 blocked_any = True
+                if self.retime == "incremental":
+                    self._blocked_keys.add(entry.key)
+                    k = entry.sort_key()
+                    if floor is None or k < floor:
+                        floor = k
+        self._blocked_floor_key = floor
+
+    def _recompute_next_reopen(self, t: float) -> None:
+        nxt = float("inf")
+        for d in self.devices.values():
+            if d.reconfiguring_until > t:
+                nxt = min(nxt, d.reconfiguring_until)
+        self._next_reopen = nxt
 
     def _try_place(self, dev: DeviceState, cj: ClusterJob, t: float) -> bool:
         if not dev.available(t):
@@ -639,6 +859,10 @@ class Cluster:
         # if every already-running job keeps its place (no preemption).
         if dev.failed_units:
             return False  # degraded shared device takes no new work
+        if self.retime == "incremental":
+            fast = self._try_place_shared_fast(dev, cj, t)
+            if fast is not None:
+                return fast
         specs = [j.spec for j in dev.running.values()] + [cj.spec]
         active = {j.name: j.active_demand() for j in dev.running.values()}
         active[cj.name] = cj.active_demand()
@@ -658,6 +882,42 @@ class Cluster:
             j.step_s = a.predicted_step_s
             dev.assignments[a.job.name] = a
             self._schedule_next_event(dev, j, t)
+        self._dirty.pop(dev.name, None)  # the full re-admission re-priced all
+        return True
+
+    def _try_place_shared_fast(
+        self, dev: DeviceState, cj: ClusterJob, t: float
+    ) -> Optional[bool]:
+        """Shared-device admission without rebuilding the scheduling model:
+        replay ``_schedule_shared``'s admission scan (priority order, running
+        footprints prefix-summed against the HBM budget) from the memoized
+        per-job verdicts, then re-price the grown set through the
+        contention-step memo. Returns None to defer to the full model in
+        the cases it owns (a *running* job failing re-admission cannot
+        happen — footprint sums of a subset are monotone — but the full
+        path is the authority if it ever did)."""
+        order = sorted(
+            list(dev.running.values()) + [cj], key=lambda j: -j.spec.priority
+        )
+        budget = dev.sku.slice_bytes
+        used = 0.0
+        for j in order:
+            adm = dev.scheduler.shared_admission(j.spec)
+            if adm is None or not adm[1] or used + adm[0] > budget:
+                if j is cj:
+                    return False
+                return None  # pragma: no cover - running jobs always re-admit
+            used += adm[0]
+        steps = self._shared_steps(dev, order)
+        if steps is None:  # pragma: no cover - admitted jobs have records
+            return None
+        self._accrue_busy(dev, t)
+        self._update_progress(dev, t)
+        dev.running[cj.name] = cj
+        cj.device = dev.name
+        cj.last_update_s = t
+        self._apply_shared_steps(dev, order, steps, t)
+        self._dirty.pop(dev.name, None)  # the placement re-priced everyone
         return True
 
     def _bind(self, dev: DeviceState, cj: ClusterJob, a: Assignment, t: float) -> None:
@@ -673,10 +933,37 @@ class Cluster:
         self._schedule_next_event(dev, cj, t)
 
     def _retime_shared(self, dev: DeviceState, t: float) -> None:
-        """Re-run the contention model after a departure or a neighbour's
+        """Re-price a shared device after a departure or a neighbour's
         phase transition (progress must already be up to date at ``t``) —
         the contention inputs are the *active phase* vectors of whatever is
-        co-resident now."""
+        co-resident now.
+
+        The incremental engine *invalidates* every co-resident lifecycle
+        event now — exactly like the full engine's eager re-push, so a
+        same-timestamp boundary event of a neighbour is absorbed into the
+        re-price rather than firing — but defers the actual re-pricing
+        until the same-timestamp batch closes (a run of k events at one
+        instant re-prices the survivors once, not k times); the full
+        engine re-runs the whole scheduling model immediately."""
+        self.perf["retime_requests"] += 1
+        if self.retime == "incremental":
+            if self._dirty:
+                if t > self._dirty_t:  # pragma: no cover - direct-call safety
+                    self._flush_retimes()
+                elif dev.name in self._dirty:
+                    self.perf["retime_batched"] += 1
+            self._dirty[dev.name] = t
+            self._dirty_t = t
+            for j in dev.running.values():
+                j.token += 1
+                if j.pending_event is not None:
+                    self.events.tombstone(j.pending_event)
+                    j.pending_event = None
+            return
+        self._retime_shared_full(dev, t)
+
+    def _retime_shared_full(self, dev: DeviceState, t: float) -> None:
+        """The reference re-pricing: re-run the full contention model."""
         sched = dev.scheduler.schedule(
             [j.spec for j in dev.running.values()],
             mode=dev.mode,
@@ -684,25 +971,115 @@ class Cluster:
                 j.name: j.active_demand() for j in dev.running.values()
             },
         )
+        self.perf["retime_jobs_repriced"] += len(sched.assignments)
         for a in sched.assignments:
             j = dev.running[a.job.name]
             j.step_s = a.predicted_step_s
             dev.assignments[a.job.name] = a
             self._schedule_next_event(dev, j, t)
 
+    def _flush_retimes(self) -> None:
+        """Close the deferred-re-timing batch: re-price every marked device
+        at its mark time. Runs before any strictly later event is popped,
+        before any placement, and before a migration look — the three
+        consumers of fresh step times."""
+        if not self._dirty:
+            return
+        marks = list(self._dirty.items())
+        self._dirty.clear()
+        for name, mt in marks:
+            dev = self.devices[name]
+            if not dev.running or dev.mode == CollocationMode.MIG:
+                continue  # drained (or repartitioned) before the batch closed
+            self.perf["retime_flushes"] += 1
+            order = sorted(dev.running.values(), key=lambda j: -j.spec.priority)
+            steps = self._shared_steps(dev, order)
+            if steps is None:  # pragma: no cover - running jobs have records
+                self._retime_shared_full(dev, mt)
+                continue
+            self._apply_shared_steps(dev, order, steps, mt)
+
+    def _shared_steps(
+        self, dev: DeviceState, order: List[ClusterJob]
+    ) -> Optional[Tuple[float, ...]]:
+        """Effective steps for a shared co-resident set (admission order),
+        memoized per (mode, SKU, ordered (arch, shape, demand) tuples) —
+        the phase-transition-schedule memo: a composition the fleet has
+        priced before (the common case on a city-scale trace drawing from
+        a small registry) is a dict hit, not a contention-model run."""
+        key = (
+            dev.mode,
+            dev.sku.name,
+            tuple(
+                (j.spec.arch, j.spec.suite.name, j.active_demand())
+                for j in order
+            ),
+        )
+        steps = self._shared_steps_cache.get(key)
+        if steps is not None:
+            self.perf["shared_steps_hits"] += 1
+            return steps
+        terms = []
+        for j in order:
+            tm = dev.scheduler.solo_terms(j.spec, j.active_demand())
+            if tm is None:
+                return None
+            terms.append(tm)
+        steps = shared_effective_steps(
+            dev.mode,
+            terms,
+            switch_overhead_frac=dev.sku.naive_switch_overhead_frac,
+        )
+        self.perf["shared_steps_misses"] += 1
+        if len(self._shared_steps_cache) > 200_000:
+            self._shared_steps_cache.clear()  # bound memory on huge traces
+        self._shared_steps_cache[key] = steps
+        return steps
+
+    def _apply_shared_steps(
+        self,
+        dev: DeviceState,
+        order: List[ClusterJob],
+        steps: Tuple[float, ...],
+        t: float,
+    ) -> None:
+        """Commit re-priced steps in admission order — the same per-job
+        writes (step_s, assignment, straggler prediction, next lifecycle
+        event) the full path performs, in the same order."""
+        full = dev.sku.full_profile
+        predicted = dev.scheduler._predicted
+        for j, step in zip(order, steps):
+            j.step_s = step
+            a = dev.assignments.get(j.name)
+            if a is None:
+                dev.assignments[j.name] = Assignment(
+                    j.spec, Placement(full, 0), step
+                )
+            else:
+                a.job = j.spec
+                a.predicted_step_s = step
+            predicted[j.name] = step
+            self._schedule_next_event(dev, j, t)
+        self.perf["retime_jobs_repriced"] += len(order)
+
     def _schedule_next_event(self, dev: DeviceState, cj: ClusterJob, t: float) -> None:
         """Schedule the job's next lifecycle event at its current step rate:
         COMPLETION if its active phase runs to the end of the job, else the
         PHASE_TRANSITION at the phase boundary. Either way the previous
-        pending event is token-invalidated."""
+        pending event is token-invalidated AND tombstoned, so the heap
+        reclaims it without waiting for its time to come up."""
         cj.token += 1
+        if cj.pending_event is not None:
+            self.events.tombstone(cj.pending_event)
         span = cj.current_span()
         if span.end_step >= cj.total_steps:
             finish = t + cj.remaining_steps * cj.step_s
-            self.events.push(finish, EventKind.COMPLETION, (dev.name, cj.name, cj.token))
+            cj.pending_event = self.events.push(
+                finish, EventKind.COMPLETION, (dev.name, cj.name, cj.token)
+            )
         else:
             boundary = t + max(0.0, span.end_step - cj.steps_done) * cj.step_s
-            self.events.push(
+            cj.pending_event = self.events.push(
                 boundary, EventKind.PHASE_TRANSITION, (dev.name, cj.name, cj.token)
             )
 
@@ -746,6 +1123,29 @@ class Cluster:
                 for a in dev.assignments.values()
             )
             return min(1.0, occupied / dev.sku.n_units)
+        if self.retime == "incremental":
+            # memoized per co-resident composition: busy fraction is a pure
+            # function of the (arch, shape, demand) multiset, and _accrue_busy
+            # recomputes it on every event touching the device
+            key = (
+                dev.sku.name,
+                tuple(
+                    (j.spec.arch, j.spec.suite.name, j.active_demand())
+                    for j in dev.running.values()
+                ),
+            )
+            frac = self._busy_cache.get(key)
+            if frac is None:
+                terms = []
+                for j in dev.running.values():
+                    tm = dev.scheduler.solo_terms(j.spec, j.active_demand())
+                    if tm is not None:
+                        terms.append(tm)
+                frac = busy_fraction_from_terms(terms)
+                if len(self._busy_cache) > 200_000:
+                    self._busy_cache.clear()
+                self._busy_cache[key] = frac
+            return frac
         profiles = []
         for j in dev.running.values():
             p = dev.scheduler.solo_profile(j.spec)
@@ -792,6 +1192,9 @@ class Cluster:
         dev.assignments.pop(name, None)
         cj.rollback_to_checkpoint()
         cj.token += 1  # invalidate the in-flight completion event
+        if cj.pending_event is not None:
+            self.events.tombstone(cj.pending_event)
+            cj.pending_event = None
         cj.device = None
         if new_spec is not None:
             cj.spec = new_spec
@@ -799,15 +1202,23 @@ class Cluster:
             cj.migrations += 1
         if count_repack:
             cj.straggler_repacks += 1
-        self.queue.push(name, cj, priority=cj.spec.priority, enqueued_s=t)
+        self._capacity_epoch += 1
+        if not dev.running:
+            self._dirty.pop(dev.name, None)  # nothing left to re-price
+        self._enqueue(name, cj, t)
 
     # -- mode migration ---------------------------------------------------------
 
     def _maybe_migrate(self, t: float) -> None:
+        if self.policy == "static":
+            return
+        if self._dirty and self.queue:
+            # migration trials rank candidate schedules against the live
+            # composition — close the re-pricing batch first (the phase
+            # -transition handler reaches here without passing _dispatch)
+            self._flush_retimes()
         if self.policy == "planner":
             self._maybe_replan(t)
-            return
-        if self.policy != "adaptive":
             return
         for dev in self.devices.values():
             if not dev.available(t):
@@ -878,6 +1289,9 @@ class Cluster:
             requeued.append(name)
         dev.pending_mode = new_mode
         dev.reconfiguring_until = t + cost
+        self._next_reopen = min(self._next_reopen, dev.reconfiguring_until)
+        self._capacity_epoch += 1  # the device closed; its jobs re-queued
+        self._dirty.pop(dev.name, None)
         dev.migrations += 1
         dev.reconfig_cost_s += cost
         dev.last_migration_s = t
@@ -1035,6 +1449,8 @@ class Cluster:
                 cj.started_s = t_eff
             placed.append(name)
         dev.reconfiguring_until = t_eff
+        self._next_reopen = min(self._next_reopen, dev.reconfiguring_until)
+        self._capacity_epoch += 1  # bindings + queue removals changed state
         dev.migrations += 1
         dev.reconfig_cost_s += cost
         dev.last_migration_s = t
@@ -1096,7 +1512,16 @@ class Cluster:
     # -- reporting --------------------------------------------------------------
 
     def report(self) -> ClusterReport:
+        if self._dirty:
+            self._flush_retimes()  # report on re-priced, not stale, rates
         horizon = self.now
+        if not self.events:
+            # fully drained. The pre-tombstone event loop popped every
+            # stale event too, advancing the clock to the latest time ever
+            # scheduled — keep that horizon semantics (utilization and
+            # goodput denominators) without paying for the dead pops.
+            horizon = max(horizon, self.events.max_time_pushed)
+            self.now = horizon
         for dev in self.devices.values():
             self._accrue_busy(dev, horizon)
         done = [self.jobs[n] for n in self.completed]

@@ -54,8 +54,10 @@ from repro.core.sharing import (
     CollocationMode,
     SharedModeReport,
     SoloProfile,
+    SoloTerms,
     shared_mode_report,
 )
+from repro.core.sharing import solo_terms as profile_terms
 from repro.core.workload import (
     STEADY_DEMAND,
     DemandTrace,
@@ -222,6 +224,11 @@ class CollocationScheduler:
         # key: (arch, shape, profile, demand, phase-peak multiplier)
         self._step_cache: Dict[Tuple, float] = {}
         self._solo_cache: Dict[Tuple[str, str, str], Optional[SoloProfile]] = {}
+        # cluster fast-path memos (core/cluster.py incremental re-timing):
+        # scaled contention terms per (SKU, arch, shape, demand) and the
+        # shared-mode admission verdict per (SKU, arch, shape, peak mult)
+        self._terms_cache: Dict[Tuple, Optional[SoloTerms]] = {}
+        self._shared_admit_cache: Dict[Tuple, Optional[Tuple[float, bool]]] = {}
 
     @property
     def cost_model(self) -> PlanningCostModel:
@@ -469,24 +476,68 @@ class CollocationScheduler:
         job-specific, so the cached arch profile is re-labelled per job
         instead of re-deriving the roofline terms on every arrival,
         departure, and re-timing."""
+        base = self._solo_base(job.arch, job.suite.name)
+        if base is None:
+            return None
+        return dataclasses.replace(base, name=job.name)
+
+    def _solo_base(self, arch: str, suite_name: str) -> Optional[SoloProfile]:
+        """The memoized arch-named solo profile behind ``solo_profile``."""
         full = self.sku.full_profile
-        key = (self.sku.name, job.arch, job.suite.name)
+        key = (self.sku.name, arch, suite_name)
         if key not in self._solo_cache:
-            rec = self.char_db.get((job.arch, job.suite.name, full))
+            rec = self.char_db.get((arch, suite_name, full))
             self._solo_cache[key] = (
                 None
                 if rec is None
                 else SoloProfile.from_record(
-                    job.arch,
+                    arch,
                     rec,
                     undiscount_compute=self.sku.compute_discount(full),
                     latency_s=self.sku.step_latency_s,
                 )
             )
-        base = self._solo_cache[key]
-        if base is None:
-            return None
-        return dataclasses.replace(base, name=job.name)
+        return self._solo_cache[key]
+
+    def solo_terms(self, job, demand) -> Optional[SoloTerms]:
+        """Memoized contention terms of the job's solo profile scaled by a
+        phase ``demand`` vector — the cluster's incremental re-timing input
+        (core/cluster.py). Bit-identical to freezing
+        ``solo_profile(job).scaled(demand)``: the scaling runs through the
+        same ``SoloProfile.scaled`` arithmetic before the terms are taken.
+        None when the full-device record is missing (same jobs the shared
+        scheduling path rejects)."""
+        key = (self.sku.name, job.arch, job.suite.name, demand)
+        if key not in self._terms_cache:
+            base = self._solo_base(job.arch, job.suite.name)
+            self._terms_cache[key] = (
+                None if base is None else profile_terms(base.scaled(demand))
+            )
+        return self._terms_cache[key]
+
+    def shared_admission(self, job) -> Optional[Tuple[float, bool]]:
+        """Memoized shared-mode admission inputs: ``(phase-peak bytes,
+        solo-fits)`` — exactly the quantities ``_schedule_shared`` derives
+        per job before summing footprints against the HBM budget. None when
+        the job has no full-device characterization (the no-record
+        rejection). Keyed on the phase-peak multiplier so a workload whose
+        plan changes its memory peak can never reuse a stale verdict."""
+        mult = peak_demand_multiplier(job)
+        key = (self.sku.name, job.arch, job.suite.name, mult)
+        if key not in self._shared_admit_cache:
+            base = self._solo_base(job.arch, job.suite.name)
+            if base is None:
+                self._shared_admit_cache[key] = None
+            else:
+                peak_bytes = base.peak_bytes_per_device * mult
+                full = self.sku.full_profile
+                fits = (
+                    self.char_db[(job.arch, job.suite.name, full)].get("fits", False)
+                    if mult == 1.0
+                    else peak_bytes <= self.sku.slice_bytes
+                )
+                self._shared_admit_cache[key] = (peak_bytes, bool(fits))
+        return self._shared_admit_cache[key]
 
     def _schedule_shared(
         self,

@@ -19,6 +19,7 @@ blocked head — a cheap observability hook for the rigidity analysis.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Any, Dict, List, Optional
 
@@ -36,12 +37,21 @@ class QueueEntry:
 
 
 class AdmissionQueue:
-    """Priority queue with stable FIFO order inside each priority class."""
+    """Priority queue with stable FIFO order inside each priority class.
+
+    Dispatch order is maintained incrementally (bisect on push, indexed
+    delete on remove) rather than re-sorted on every ``ordered()`` call —
+    the dispatcher scans the queue on every capacity event, which made the
+    O(n log n) re-sort a leading term at city-scale queue depths.
+    ``peak_depth`` records the deepest the queue ever got (a burst-pressure
+    metric benchmarks/sim_perf.py reports per scenario cell)."""
 
     def __init__(self) -> None:
         self._entries: Dict[str, QueueEntry] = {}
+        self._sorted: List[QueueEntry] = []  # maintained in sort_key order
         self._seq = 0
         self.hol_blocked_events = 0
+        self.peak_depth = 0
 
     def push(self, key: str, item: Any, *, priority: int, enqueued_s: float) -> QueueEntry:
         if key in self._entries:
@@ -49,17 +59,26 @@ class AdmissionQueue:
         e = QueueEntry(key, item, int(priority), float(enqueued_s), self._seq)
         self._seq += 1
         self._entries[key] = e
+        bisect.insort(self._sorted, e, key=QueueEntry.sort_key)
+        if len(self._entries) > self.peak_depth:
+            self.peak_depth = len(self._entries)
         return e
 
     def remove(self, key: str) -> QueueEntry:
-        return self._entries.pop(key)
+        e = self._entries.pop(key)
+        # sort_key ends in the unique push seq, so bisect lands exactly on e
+        i = bisect.bisect_left(self._sorted, e.sort_key(), key=QueueEntry.sort_key)
+        while self._sorted[i] is not e:  # pragma: no cover - defensive
+            i += 1
+        del self._sorted[i]
+        return e
 
     def get(self, key: str) -> Optional[QueueEntry]:
         return self._entries.get(key)
 
     def ordered(self) -> List[QueueEntry]:
         """Entries in dispatch order: priority desc, then FIFO."""
-        return sorted(self._entries.values(), key=QueueEntry.sort_key)
+        return list(self._sorted)
 
     def keys(self) -> List[str]:
         return [e.key for e in self.ordered()]

@@ -66,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 from repro.telemetry.constants import HBM_PER_CHIP
 
@@ -331,3 +331,89 @@ def sequential_time_s(jobs: Sequence[SoloProfile]) -> float:
     """Baseline the paper compares every mode against: run the jobs one
     after another, each alone on the full device."""
     return sum(j.step_s for j in jobs)
+
+
+# -- precomputed-terms fast path (cluster re-timing storms) ---------------------
+#
+# The cluster simulator re-prices a shared device's whole co-resident set on
+# every arrival, departure, and phase transition. The full path builds
+# SharedModeReport objects (dicts, interference ratios, rejection prose)
+# that the re-timing loop never reads; at city scale that object churn — and
+# re-deriving each profile's activity fractions per call — dominates the
+# event loop. ``SoloTerms`` freezes one scaled profile's contention inputs
+# into a flat tuple once, and ``shared_effective_steps`` replays *exactly*
+# the arithmetic of mps_contention / naive_contention over those tuples (the
+# same sums in the same order, so results are bit-identical — the contract
+# tests/test_retime_equivalence.py enforces against the full path).
+
+
+class SoloTerms(NamedTuple):
+    """One scaled solo profile reduced to the contention model's inputs."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    latency_s: float
+    step_s: float
+    u_compute: float
+    u_memory: float
+    u_collective: float
+
+
+def solo_terms(profile: SoloProfile) -> SoloTerms:
+    """Freeze ``profile``'s contention inputs (same floats as the properties
+    the full model reads — ``activity`` is evaluated once per resource)."""
+    return SoloTerms(
+        profile.compute_s,
+        profile.memory_s,
+        profile.collective_s,
+        profile.latency_s,
+        profile.step_s,
+        profile.activity("compute_s"),
+        profile.activity("memory_s"),
+        profile.activity("collective_s"),
+    )
+
+
+def shared_effective_steps(
+    mode: CollocationMode,
+    terms: Sequence[SoloTerms],
+    *,
+    switch_overhead_frac: float = NAIVE_SWITCH_OVERHEAD_FRAC,
+) -> Tuple[float, ...]:
+    """Effective step times for a co-resident set, in input order.
+
+    Bit-identical to ``mps_contention`` / ``naive_contention`` on the same
+    set: every sum runs over the jobs in the same order and every max takes
+    its operands in the same resource order, so no float can drift between
+    this and the report-building path."""
+    if mode == CollocationMode.NAIVE:
+        overhead = switch_overhead_frac if len(terms) > 1 else 0.0
+        round_s = (1.0 + overhead) * sum(t.step_s for t in terms)
+        return tuple(round_s for _ in terms)
+    if mode != CollocationMode.MPS:
+        raise ValueError(f"{mode} is not a shared mode — use the MIG scheduler path")
+    f_compute = max(1.0, sum(t.u_compute for t in terms))
+    f_memory = max(1.0, sum(t.u_memory for t in terms))
+    f_collective = max(1.0, sum(t.u_collective for t in terms))
+    f_latency = max(1.0, sum(t.u_compute for t in terms))
+    return tuple(
+        t.latency_s * f_latency
+        + max(t.compute_s * f_compute, t.memory_s * f_memory, t.collective_s * f_collective)
+        for t in terms
+    )
+
+
+def busy_fraction_from_terms(terms: Sequence[SoloTerms]) -> float:
+    """``device_busy_fraction`` over pre-frozen terms — same sums, same
+    resource order, bit-identical result."""
+    if not terms:
+        return 0.0
+    return min(
+        1.0,
+        max(
+            sum(t.u_compute for t in terms),
+            sum(t.u_memory for t in terms),
+            sum(t.u_collective for t in terms),
+        ),
+    )

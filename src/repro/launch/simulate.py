@@ -65,6 +65,7 @@ ensure_host_platform_devices()  # parity with collocate.py for --db reruns
 
 import argparse
 import json
+import math
 import random
 import traceback
 from pathlib import Path
@@ -171,6 +172,19 @@ SCENARIO_HELP = {
                   "the queue drains each job onto whichever tree fits it; "
                   "big-memory serve jobs only fit the 80GB slices",
 }
+# The city_scale family is registered separately: its cells belong to the
+# perf scoreboard (benchmarks/sim_perf.py runs them at 10^5+ arrivals over
+# hundreds of devices) and are opt-in via --scenarios, not part of the
+# default artifact grid — the 30 (scenario x policy) cells above stay the
+# byte-pinned determinism surface.
+CITY_SCENARIO_HELP = {
+    "city_diurnal": "city-scale session stream: Poisson arrivals rate-"
+                    "modulated by a diurnal cycle (serve-heavy mix) — the "
+                    "scoreboard's steady-load cell (benchmarks/sim_perf.py)",
+    "city_burst": "city-scale session stream: Markov-modulated Poisson "
+                  "with short high-rate bursts — the queue-depth stressor "
+                  "cell on the scoreboard",
+}
 POLICY_HELP = {
     "all-mig": "homogeneous MIG fleet, greedy first-fit placement",
     "all-mps": "homogeneous MPS fleet (spatial sharing)",
@@ -180,6 +194,8 @@ POLICY_HELP = {
                "(core/planner), with plan-driven re-partitions",
 }
 SCENARIOS = tuple(SCENARIO_HELP)
+CITY_SCENARIOS = tuple(CITY_SCENARIO_HELP)
+ALL_SCENARIOS = SCENARIOS + CITY_SCENARIOS
 POLICIES = tuple(POLICY_HELP)
 
 
@@ -406,6 +422,91 @@ def hetero_sku_trace(
     return trace
 
 
+# The city_scale family: the trace shapes the scoreboard runs at 10^5-10^6
+# arrivals over hundreds of devices (benchmarks/sim_perf.py). Sessions are
+# drawn from archs every fleet mode admits on every registered SKU, so the
+# same generators double as ordinary (small) scenario cells in the default
+# grid: serve sessions over the tiny/aligned archs, training jobs over the
+# small end of the training mix.
+_CITY_SERVE_MIX = (("whisper-base", 0.60), ("granite-3-2b", 0.40))
+_CITY_TRAIN_MIX = (
+    ("resnet_small", 0.45),
+    ("llama3-8b", 0.30),
+    ("resnet_medium", 0.25),
+)
+
+
+def _city_session(rng: random.Random, t: float, i: int, serve_frac: float) -> TraceItem:
+    """One city arrival: a latency-SLO inference session (probability
+    ``serve_frac`` — city streams are serve-heavy) or a phase-aware
+    training job."""
+    if rng.random() < serve_frac:
+        arch = _weighted(rng, _CITY_SERVE_MIX)
+        wl = serve_workload(
+            f"ct{i}",
+            arch,
+            SERVE_SUITE,
+            slo_step_s=SERVE_SLO_S[arch],
+            prefill_steps=4,
+            priority=1,
+        )
+        return (t, wl, 1)
+    arch = _weighted(rng, _CITY_TRAIN_MIX)
+    wl = train_workload(f"ct{i}", arch, SIM_SUITE, warmup_steps=5, checkpoint_steps=3)
+    return (t, wl, 1)
+
+
+def city_diurnal_trace(
+    rng: random.Random,
+    n_jobs: int,
+    *,
+    mean_interarrival_s: float = 0.02,
+    serve_frac: float = 0.70,
+) -> List[TraceItem]:
+    """Diurnal city load: a non-homogeneous Poisson stream whose rate
+    follows a sinusoidal day cycle (0.35x in the trough to 1.65x at the
+    peak), one synthetic day per trace regardless of ``n_jobs`` — so a
+    10^5-arrival scoreboard run and a 60-job test cell sweep the same
+    load shape. Each exponential gap is scaled by the instantaneous rate
+    (equivalent to thinning, without discarding draws)."""
+    trace: List[TraceItem] = []
+    t = 0.0
+    day_s = max(n_jobs, 1) * mean_interarrival_s
+    for i in range(n_jobs):
+        rate_x = 1.0 + 0.65 * math.sin((t / day_s) * 2.0 * math.pi)
+        t += rng.expovariate(rate_x / mean_interarrival_s)
+        trace.append(_city_session(rng, t, i, serve_frac))
+    return trace
+
+
+def city_burst_trace(
+    rng: random.Random,
+    n_jobs: int,
+    *,
+    calm_interarrival_s: float = 0.05,
+    burst_interarrival_s: float = 0.004,
+    max_burst: int = 12,
+    serve_frac: float = 0.70,
+) -> List[TraceItem]:
+    """Bursty city load: a Markov-modulated Poisson stream — calm
+    stretches punctuated by short bursts at ~12x the calm rate (session
+    storms). The burst windows are what drive ``peak_depth`` on the
+    admission queue, the scoreboard's burst-pressure column."""
+    trace: List[TraceItem] = []
+    t = 0.0
+    burst_left = 0
+    for i in range(n_jobs):
+        if burst_left == 0 and rng.random() < 0.08:
+            burst_left = rng.randint(5, max_burst)
+        if burst_left > 0:
+            burst_left -= 1
+            t += rng.expovariate(1.0 / burst_interarrival_s)
+        else:
+            t += rng.expovariate(1.0 / calm_interarrival_s)
+        trace.append(_city_session(rng, t, i, serve_frac))
+    return trace
+
+
 def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[TraceItem]:
     # fresh, scenario-salted RNG: identical trace for every policy
     rng = random.Random(f"{seed}:{scenario}")
@@ -421,8 +522,12 @@ def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[Tr
         return fragmentation_trace(rng, n_jobs, n_devices)
     if scenario == "hetero_sku":
         return hetero_sku_trace(rng, n_jobs)
+    if scenario == "city_diurnal":
+        return city_diurnal_trace(rng, n_jobs)
+    if scenario == "city_burst":
+        return city_burst_trace(rng, n_jobs)
     raise ValueError(
-        f"unknown scenario {scenario!r}; choose from: {', '.join(SCENARIOS)}"
+        f"unknown scenario {scenario!r}; choose from: {', '.join(ALL_SCENARIOS)}"
     )
 
 
@@ -470,6 +575,7 @@ def run_cell(
     reconfig_cost_s: float = 0.5,
     char_db: Optional[Dict] = None,
     sku: str = "a100-40gb",
+    retime: str = "incremental",
 ) -> Dict:
     """One (scenario x policy) simulation; returns the artifact cell dict.
 
@@ -477,7 +583,10 @@ def run_cell(
     scenario overrides it with the fixed mixed-generation fleet. When
     ``char_db`` is None, per-SKU synthetic DBs are built; a flat measured
     DB (--db) only speaks one SKU's profile names, so it is rejected for
-    any other fleet."""
+    any other fleet. ``retime`` selects the cluster's re-pricing engine
+    (--retime): the incremental default or the full reference path — the
+    two must produce byte-identical cells (tests/test_retime_equivalence),
+    so the choice is deliberately not recorded in the artifact schema."""
     fleet_skus: Tuple[str, ...] = (
         HETERO_FLEET_SKUS if scenario == "hetero_sku" else (sku,)
     )
@@ -502,6 +611,7 @@ def run_cell(
         policy=cluster_policy,
         reconfig_cost_s=reconfig_cost_s,
         migration_cooldown_s=1.0,
+        retime=retime,
     )
     trace = make_trace(scenario, seed, n_jobs, n_devices)
     for arrival_s, spec, epochs in trace:
@@ -563,6 +673,7 @@ def run_all(
     policies: Sequence[str] = POLICIES,
     char_db: Optional[Dict] = None,
     sku: str = "a100-40gb",
+    retime: str = "incremental",
 ) -> List[Dict]:
     if char_db is None:
         # one per-SKU DB set shared by every cell (covers the selected
@@ -578,6 +689,7 @@ def run_all(
             reconfig_cost_s=reconfig_cost_s,
             char_db=char_db,
             sku=sku,
+            retime=retime,
         )
         for sc in scenarios
         for po in policies
@@ -614,6 +726,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="device generation of the fleet (core/device.py); "
                          "the hetero_sku scenario always provisions its "
                          "fixed mixed-generation fleet instead")
+    ap.add_argument("--retime", default="incremental",
+                    choices=("incremental", "full"),
+                    help="cluster re-pricing engine: the incremental "
+                         "deferred-batch path (default) or the full "
+                         "reference path; both produce byte-identical "
+                         "artifacts (tests/test_retime_equivalence.py)")
     ap.add_argument("--db", default=None,
                     help="load the char DB from collocate.py artifacts "
                          "instead of the synthetic catalog (a100-40gb "
@@ -626,6 +744,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.list:
         print("scenarios:")
         for name, desc in SCENARIO_HELP.items():
+            print(f"  {name:<16} {desc}")
+        print("city-scale scenarios (scoreboard family, opt-in via --scenarios):")
+        for name, desc in CITY_SCENARIO_HELP.items():
             print(f"  {name:<16} {desc}")
         print("fleet policies:")
         for name, desc in POLICY_HELP.items():
@@ -645,11 +766,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     # traceback (or a silently FAILed artifact cell) deep in the run loop
     scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
-    unknown = [s for s in scenarios if s not in SCENARIOS]
+    unknown = [s for s in scenarios if s not in ALL_SCENARIOS]
     if unknown:
         ap.error(
             f"unknown scenario(s): {', '.join(unknown)} "
-            f"(choose from: {', '.join(SCENARIOS)})"
+            f"(choose from: {', '.join(ALL_SCENARIOS)})"
         )
     unknown = [p for p in policies if p not in POLICIES]
     if unknown:
@@ -698,6 +819,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     reconfig_cost_s=args.reconfig_cost,
                     char_db=char_db,
                     sku=args.sku,
+                    retime=args.retime,
                 )
                 _dump(out_dir / f"{scenario}__{policy}.json", cell)
                 s = summarize_cell(cell)

@@ -1,0 +1,177 @@
+"""Property tests for core/events.py: the (time, seq) tie-break the whole
+determinism contract hangs on, tombstone (lazy-deletion) behavior, the
+compaction bound that fixes the stale-event heap leak, and heap-order
+invariance across push orders."""
+import random
+
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.events import Event, EventKind, EventQueue
+
+
+def _drain(q: EventQueue):
+    out = []
+    while q:
+        out.append(q.pop())
+    return out
+
+
+# -- (time, seq) tie-break determinism ---------------------------------------------
+
+
+def test_equal_time_events_pop_in_push_order():
+    q = EventQueue()
+    pushed = [q.push(1.0, EventKind.ARRIVAL, (f"j{i}",)) for i in range(50)]
+    assert [ev.payload for ev in _drain(q)] == [ev.payload for ev in pushed]
+
+
+def test_tie_break_holds_under_interleaved_times():
+    q = EventQueue()
+    # two same-timestamp batches interleaved with other times: each batch
+    # must still come out in its own push order
+    q.push(2.0, EventKind.ARRIVAL, ("late0",))
+    a = [q.push(1.0, EventKind.ARRIVAL, (f"a{i}",)) for i in range(5)]
+    q.push(0.5, EventKind.ARRIVAL, ("early",))
+    b = [q.push(1.0, EventKind.COMPLETION, (f"b{i}",)) for i in range(5)]
+    order = [ev.payload[0] for ev in _drain(q)]
+    assert order[0] == "early"
+    assert order[-1] == "late0"
+    batch = order[1:-1]
+    assert batch == [f"a{i}" for i in range(5)] + [f"b{i}" for i in range(5)]
+
+
+def test_heap_order_invariant_across_push_orders():
+    """Any arrival order of the same timestamps drains time-sorted, with
+    push order breaking ties — the sort key is total, so the drained
+    sequence is a pure function of the push sequence."""
+    times = [3.0, 1.0, 1.0, 2.0, 0.0, 2.0, 1.0, 5.0, 0.0]
+    for trial in range(10):
+        rng = random.Random(trial)
+        shuffled = times[:]
+        rng.shuffle(shuffled)
+        q = EventQueue()
+        for i, t in enumerate(shuffled):
+            q.push(t, EventKind.ARRIVAL, (i,))
+        drained = _drain(q)
+        assert [e.time_s for e in drained] == sorted(shuffled)
+        assert drained == sorted(drained, key=Event.sort_key)
+        # ties resolved by seq == push order
+        for x, y in zip(drained, drained[1:]):
+            if x.time_s == y.time_s:
+                assert x.seq < y.seq
+
+
+# -- tombstones ---------------------------------------------------------------------
+
+
+def test_tombstoned_event_never_pops_and_len_counts_live():
+    q = EventQueue()
+    keep = q.push(1.0, EventKind.ARRIVAL, ("keep",))
+    dead = q.push(0.5, EventKind.COMPLETION, ("dead",))
+    assert len(q) == 2
+    assert q.tombstone(dead) is True
+    assert q.tombstone(dead) is False  # idempotent, reported
+    assert len(q) == 1 and bool(q)
+    assert q.peek_time() == 1.0  # skims the tombstoned head
+    assert q.pop() is keep
+    assert not q
+    with pytest.raises(IndexError):
+        q.pop()
+
+
+def test_max_time_pushed_includes_tombstoned():
+    """The horizon the report compensates with: the old eager-pop loop
+    advanced the clock over stale events too, so the latest time ever
+    pushed must survive the event's death."""
+    q = EventQueue()
+    assert q.max_time_pushed == float("-inf")
+    far = q.push(99.0, EventKind.COMPLETION, ("far",))
+    q.push(1.0, EventKind.ARRIVAL, ("near",))
+    q.tombstone(far)
+    _drain(q)
+    assert q.max_time_pushed == 99.0
+
+
+def test_compaction_bounds_heap_at_twice_live():
+    """The leak fix: a re-timing-heavy pattern (push + tombstone + replace,
+    never popping) must not grow the heap unboundedly."""
+    q = EventQueue()
+    live = [q.push(float(i), EventKind.COMPLETION, (i,)) for i in range(64)]
+    for round_ in range(200):
+        for i in range(64):
+            q.tombstone(live[i])
+            live[i] = q.push(float(i) + round_ + 1, EventKind.COMPLETION, (i,))
+    assert q.compactions > 0
+    assert len(q) == 64
+    # physical heap stays O(live): the half-full threshold caps dead weight
+    assert len(q._heap) <= 2 * 64 + 1
+    assert sorted(ev.payload[0] for ev in _drain(q)) == list(range(64))
+
+
+def test_cluster_run_compacts_the_heap():
+    """End-to-end pin: a phase-heavy cell actually exercises the tombstone
+    threshold (every re-timing invalidates each neighbour's pending
+    event), so compactions must occur during a plain simulation run."""
+    from repro.launch.simulate import run_cell  # noqa: F401  (db plumbing)
+    from repro.launch.simulate import SIM_SAMPLES_PER_EPOCH, make_fleet, make_trace, synthetic_sku_dbs
+    from repro.core.cluster import Cluster
+
+    devices, policy = make_fleet("all-mps", 4)
+    cluster = Cluster(synthetic_sku_dbs(("a100-40gb",)), devices, policy=policy,
+                      reconfig_cost_s=0.5, migration_cooldown_s=1.0)
+    for arrival_s, spec, epochs in make_trace("train_serve_mix", 0, 60, 4):
+        cluster.submit(spec, arrival_s, epochs=epochs,
+                       samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+    cluster.run()
+    assert cluster.events.compactions > 0
+
+
+# -- hypothesis: random op sequences against a reference model ---------------------
+
+_OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["push", "tombstone", "pop"]),
+        st.floats(min_value=0.0, max_value=100.0,
+                  allow_nan=False, allow_infinity=False),
+    ),
+    min_size=1,
+    max_size=200,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=_OPS)
+def test_queue_matches_reference_model(ops):
+    """Drive EventQueue with a random push/tombstone/pop sequence and
+    compare against a brute-force model (a list re-sorted on every op):
+    identical pop results, identical live counts, and a bounded heap."""
+    q = EventQueue()
+    model = []  # list of Event, the live set
+    pending = []  # tombstone candidates (still-queued events)
+    for op, t in ops:
+        if op == "push":
+            ev = q.push(t, EventKind.ARRIVAL, ())
+            model.append(ev)
+            pending.append(ev)
+        elif op == "tombstone" and pending:
+            ev = pending.pop(len(pending) // 2)
+            assert q.tombstone(ev) is True
+            model.remove(ev)
+            # the tombstone threshold caps dead weight at the half-full
+            # mark, so right after any tombstone call the physical heap is
+            # O(live) (pops of live events can thin the heap below the
+            # mark without re-triggering it, so the bound is only asserted
+            # where it is enforced)
+            assert len(q._tombstoned) * 2 <= len(q._heap)
+        elif op == "pop" and model:
+            expect = min(model, key=Event.sort_key)
+            got = q.pop()
+            assert got is expect
+            model.remove(got)
+            if got in pending:
+                pending.remove(got)
+        assert len(q) == len(model)
+        assert bool(q) == bool(model)
+    drained = _drain(q)
+    assert drained == sorted(model, key=Event.sort_key)

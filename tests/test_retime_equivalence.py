@@ -1,0 +1,167 @@
+"""The PR's center of gravity: the incremental re-timing engine
+(``Cluster(retime="incremental")``, the default) must be *behavior-identical*
+to the full reference engine (``retime="full"``, the pre-optimization code
+path) — identical live event streams, identical metrics, and byte-identical
+artifact cells for every scenario x fleet-policy combination at the pinned
+seed-0 defaults (the 30 cells of the committed artifact grid, plus the
+city_scale family).
+
+Event streams are compared as per-timestamp multisets: within one timestamp
+the engines may *pop* live events in different seq orders (the deferred
+batch re-push assigns later seq numbers than the eager path's interleaved
+pushes), but the set of live events fired at each instant — and therefore
+every piece of simulated state — must agree exactly.
+"""
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.cluster import Cluster
+from repro.core.instance import JobSpec
+from repro.launch.simulate import (
+    ALL_SCENARIOS,
+    HETERO_FLEET_SKUS,
+    POLICIES,
+    SERVE_SLO_S,
+    SERVE_SUITE,
+    SIM_SAMPLES_PER_EPOCH,
+    SIM_SUITE,
+    _rounded,
+    make_fleet,
+    make_trace,
+    run_cell,
+    synthetic_sku_dbs,
+)
+from repro.core.workload import serve_workload, train_workload
+
+# one per-SKU DB set shared by every cell in the module (what run_all does)
+_DB = synthetic_sku_dbs(("a100-40gb",) + HETERO_FLEET_SKUS)
+
+_CELLS = [(sc, po) for sc in ALL_SCENARIOS for po in POLICIES]
+
+
+def _artifact_bytes(cell: dict) -> bytes:
+    """Exactly what launch/simulate.py writes to disk for a cell."""
+    return (json.dumps(_rounded(cell), indent=2, sort_keys=True) + "\n").encode()
+
+
+def _stream_multisets(stream):
+    """Group the live-event log by rounded timestamp, order-insensitively
+    within each instant (see module docstring)."""
+    groups = {}
+    for t, kind, payload in stream:
+        groups.setdefault(t, []).append((kind, payload))
+    return {t: sorted(evs) for t, evs in groups.items()}
+
+
+@pytest.mark.parametrize("scenario,policy", _CELLS)
+def test_artifact_cell_bytes_identical(scenario, policy):
+    """The acceptance criterion: every seed-0 default-grid cell reproduces
+    byte-for-byte on the incremental path (the cell dict embeds the whole
+    report, so metrics equality is implied by bytes equality)."""
+    full = run_cell(scenario, policy, seed=0, char_db=_DB, retime="full")
+    inc = run_cell(scenario, policy, seed=0, char_db=_DB, retime="incremental")
+    assert _artifact_bytes(inc) == _artifact_bytes(full)
+
+
+def _drive(scenario, policy, retime, *, seed=0, n_jobs=40, n_devices=2):
+    """Run one cell on a bare Cluster with the live-event log enabled;
+    returns (event stream, report dict)."""
+    fleet_skus = HETERO_FLEET_SKUS if scenario == "hetero_sku" else ("a100-40gb",)
+    devices, cluster_policy = make_fleet(policy, n_devices, fleet_skus)
+    cluster = Cluster(
+        _DB,
+        devices,
+        policy=cluster_policy,
+        reconfig_cost_s=0.5,
+        migration_cooldown_s=1.0,
+        retime=retime,
+    )
+    cluster.event_log = []
+    for arrival_s, spec, epochs in make_trace(scenario, seed, n_jobs, n_devices):
+        cluster.submit(
+            spec, arrival_s, epochs=epochs, samples_per_epoch=SIM_SAMPLES_PER_EPOCH
+        )
+    report = cluster.run()
+    return cluster.event_log, _rounded(report.to_dict())
+
+
+@pytest.mark.parametrize("scenario,policy", _CELLS)
+def test_live_event_streams_identical(scenario, policy):
+    stream_full, report_full = _drive(scenario, policy, "full")
+    stream_inc, report_inc = _drive(scenario, policy, "incremental")
+    assert report_inc == report_full
+    assert len(stream_inc) == len(stream_full)
+    assert _stream_multisets(stream_inc) == _stream_multisets(stream_full)
+
+
+def test_retime_arg_is_validated():
+    with pytest.raises(ValueError):
+        Cluster(_DB, [("d0", "mps")], retime="bogus")
+
+
+# -- hypothesis: random arrival/phase/departure interleavings ----------------------
+
+_ARCHS = ("whisper-base", "granite-3-2b", "resnet_small", "llama3-8b")
+
+_JOBS = st.lists(
+    st.tuples(
+        st.floats(min_value=0.0, max_value=3.0,
+                  allow_nan=False, allow_infinity=False),  # arrival time
+        st.integers(min_value=0, max_value=len(_ARCHS) - 1),
+        st.integers(min_value=0, max_value=2),  # priority
+        st.integers(min_value=1, max_value=2),  # epochs
+        st.booleans(),  # phase-aware workload (serve/train) vs plain spec
+    ),
+    min_size=1,
+    max_size=20,
+)
+
+
+def _job(i, arrival, arch_i, priority, serve):
+    arch = _ARCHS[arch_i]
+    if not serve:
+        return JobSpec(f"p{i}", arch, SIM_SUITE, priority=priority)
+    if arch in SERVE_SLO_S:
+        return serve_workload(
+            f"s{i}", arch, SERVE_SUITE, slo_step_s=SERVE_SLO_S[arch],
+            prefill_steps=3, priority=priority,
+        )
+    return train_workload(
+        f"t{i}", arch, SIM_SUITE, warmup_steps=2, checkpoint_steps=2,
+        priority=priority,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(jobs=_JOBS, policy=st.sampled_from(POLICIES))
+def test_random_interleavings_incremental_equals_full(jobs, policy):
+    """Generative equivalence: arbitrary arrival/priority/phase mixes —
+    including same-timestamp pileups, the deferred batch's hard case —
+    produce identical live streams and reports on both engines."""
+    results = []
+    for retime in ("full", "incremental"):
+        devices, cluster_policy = make_fleet(policy, 2)
+        cluster = Cluster(
+            _DB,
+            devices,
+            policy=cluster_policy,
+            reconfig_cost_s=0.5,
+            migration_cooldown_s=1.0,
+            retime=retime,
+        )
+        cluster.event_log = []
+        for i, (arrival, arch_i, priority, epochs, serve) in enumerate(jobs):
+            cluster.submit(
+                _job(i, arrival, arch_i, priority, serve),
+                round(arrival, 3),  # coarse grid => frequent exact-time ties
+                epochs=epochs,
+                samples_per_epoch=SIM_SAMPLES_PER_EPOCH,
+            )
+        report = cluster.run()
+        results.append((_stream_multisets(cluster.event_log),
+                        _rounded(report.to_dict())))
+    (stream_full, report_full), (stream_inc, report_inc) = results
+    assert report_inc == report_full
+    assert stream_inc == stream_full

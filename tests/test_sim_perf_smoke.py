@@ -1,0 +1,82 @@
+"""Perf-regression smoke tests for the simulator event loop.
+
+No absolute wall-clock asserts anywhere: the throughput check normalizes
+events/sec by a synthetic heap-workload calibration run on the *same*
+machine and compares that dimensionless ratio against the committed
+baseline (benchmarks/sim_perf_baseline.json) with a generous factor, so CI
+stays non-flaky across hardware. The complexity guard counts re-timing
+*work* (the instrumented ``retime_jobs_repriced`` counter), which is
+machine-independent by construction.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from benchmarks.sim_perf import (
+    BASELINE_PATH,
+    SMOKE_CELL,
+    SimPerfCell,
+    machine_calibration,
+    run_perf_cell,
+    strip_volatile,
+)
+
+#: How much slower than the committed normalized baseline we tolerate
+#: before calling it a regression. The normalization cancels machine speed
+#: to first order; the slack absorbs interpreter-version and load noise.
+_SLOWDOWN_FACTOR = 4.0
+
+
+def test_events_per_sec_within_relative_factor_of_baseline():
+    baseline = json.loads(Path(BASELINE_PATH).read_text())
+    assert baseline["cell"] == SMOKE_CELL.name  # stale-baseline guard
+    calib = machine_calibration()
+    row = run_perf_cell(SMOKE_CELL, seed=baseline["seed"])
+    normalized = row["perf"]["events_per_s"] / calib
+    floor = baseline["events_per_s_normalized"] / _SLOWDOWN_FACTOR
+    assert normalized > floor, (
+        f"simulator throughput regressed: {normalized:.6f} normalized "
+        f"events/s vs committed baseline "
+        f"{baseline['events_per_s_normalized']:.6f} "
+        f"(floor {floor:.6f} = baseline/{_SLOWDOWN_FACTOR:.0f}); "
+        f"re-baseline with benchmarks/sim_perf.py --write-baseline only "
+        f"if the slowdown is intended"
+    )
+
+
+def test_retime_work_grows_subquadratically():
+    """The O(.) guard on the incremental engine: doubling the job count
+    must not quadruple re-pricing work (full re-timing of every
+    co-resident on every event is the quadratic failure mode this PR
+    removed). Counted work, not wall-clock — machine-independent."""
+    small = run_perf_cell(
+        SimPerfCell("oguard_small", "city_diurnal", "all-mps", 600, 8)
+    )
+    big = run_perf_cell(
+        SimPerfCell("oguard_big", "city_diurnal", "all-mps", 1200, 8)
+    )
+    w_small = small["determinism"]["retime_jobs_repriced"]
+    w_big = big["determinism"]["retime_jobs_repriced"]
+    assert w_small > 0
+    growth = w_big / w_small
+    assert growth < 3.0, (
+        f"re-timing work grew {growth:.2f}x for 2x jobs "
+        f"({w_small} -> {w_big} jobs repriced) — super-linear blowup"
+    )
+
+
+def test_scoreboard_determinism_block_reproduces():
+    """Two runs of the same cell agree on every non-volatile field — the
+    per-cell analogue of CI's strip-volatile byte-compare of two full
+    BENCH_simperf.json documents."""
+    cell = SimPerfCell("det_check", "city_burst", "all-mig", 800, 4)
+    a = run_perf_cell(cell)
+    b = run_perf_cell(cell)
+    doc_a = {"schema": "sim_perf/v1", "cells": [a]}
+    doc_b = {"schema": "sim_perf/v1", "cells": [b]}
+    assert strip_volatile(doc_a) == strip_volatile(doc_b)
+    assert a["determinism"]["events_processed"] > 0
+    assert a["determinism"]["peak_queue_depth"] >= 1
+    # the volatile keys really are stripped (wall-clock never compared)
+    assert "perf" not in strip_volatile(doc_a)["cells"][0]
