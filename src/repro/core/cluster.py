@@ -69,6 +69,26 @@ feeds the per-device EMA, and a flagged straggler is checkpointed,
 re-queued with a ``min_profile`` floor one profile larger (the repack_plan
 suggestion), and re-placed — the one-shot plan turned into a live action.
 
+Gang jobs (core/gang/ — the Flex-MIG direction): a spec with
+``world_size > 1`` runs as k cooperating members, each on its own MIG
+slice, possibly across devices. Admission is all-or-nothing: the gang
+placement search (core/gang/placement.py) either finds a slice for every
+member or the gang waits whole — after ``gang_reserve_after_s`` of
+waiting, a GANG_RESERVE event grants the oldest blocked gang the
+admission queue's device reservation so backfilling singletons stop
+refilling the capacity it needs (the starvation bound; reservations
+release deterministically on placement or rejection). A placed gang is
+ONE ClusterJob registered in every member device's ``running`` map, with
+per-rank assignments keyed ``name#r<rank>``; its effective step is the
+slowest member plus the communication overhead (core/gang/comms.py), so
+co-located slice sets strictly beat scattered ones. One member's slice
+failing kills the whole gang — surviving members are torn down on their
+devices and the gang re-queues once, priority-bumped, resuming from its
+last coordinated checkpoint (``elastic.split_by_failure`` maps the hit
+member back to its gang). Gangs are MIG-only: shared-mode fleets reject
+them at arrival, and the adaptive/planner migration paths leave
+gang-hosting devices alone.
+
 Determinism: given the same submitted trace, every run is bit-identical —
 events tie-break in push order, queues order by (priority, arrival, seq),
 and nothing reads wall clocks or unseeded RNG. launch/simulate.py layers a
@@ -93,6 +113,13 @@ from repro.core.device import DEFAULT_SKU, DeviceSKU, get_sku
 from repro.core.device import DEFAULT_RECONFIG_COST_S as _BASE_RECONFIG_COST_S
 from repro.core.elastic import REQUEUE_PRIORITY_BUMP, split_by_failure
 from repro.core.events import Event, EventKind, EventQueue
+from repro.core.gang.comms import DEFAULT_LINK, LinkModel, gang_step_s
+from repro.core.gang.parallelism import (
+    gang_world_size,
+    member_name,
+    resolve_parallelism,
+)
+from repro.core.gang.placement import GangPlan, plan_gang
 from repro.core.instance import JobSpec
 from repro.core.profiles import Placement
 from repro.core.queueing import AdmissionQueue, QueueEntry
@@ -106,6 +133,7 @@ from repro.core.workload import (
     PhaseSpan,
     Workload,
     as_workload,
+    member_demand,
     peak_demand_multiplier,
     span_at,
 )
@@ -156,10 +184,19 @@ class ClusterJob:
     token: int = 0  # completion-event generation (lazy invalidation)
     pending_event: Optional[Event] = None  # in-heap lifecycle event, if any
     rejected_reason: Optional[str] = None
+    # -- gang runtime state (world_size > 1 only) ---------------------------
+    member_devices: Tuple[str, ...] = ()  # device per member rank, placed
+    gang_requeues: int = 0  # gang-wide failure re-queues
+    gang_spread: int = 0  # distinct devices at the last placement
+    gang_reserve_pending: bool = False  # a GANG_RESERVE event is in-heap
 
     @property
     def name(self) -> str:
         return self.spec.name
+
+    @property
+    def world_size(self) -> int:
+        return gang_world_size(self.spec)
 
     def current_span(self) -> PhaseSpan:
         return span_at(self.plan, self.steps_done)
@@ -208,7 +245,7 @@ class ClusterJob:
         return lost
 
     def to_row(self) -> Dict:
-        return {
+        row = {
             "name": self.name,
             "arch": self.spec.arch,
             "kind": self.kind,
@@ -228,6 +265,15 @@ class ClusterJob:
             "lost_steps": self.lost_steps,
             "rejected_reason": self.rejected_reason,
         }
+        # schema extension only where the gang axis is exercised: rows for
+        # singleton jobs stay byte-identical to the pre-gang artifacts —
+        # the same conditional-key rule DeviceState.to_row applies to SKUs
+        if self.world_size > 1:
+            row["world_size"] = self.world_size
+            row["parallelism"] = resolve_parallelism(self.spec).label
+            row["gang_requeues"] = self.gang_requeues
+            row["gang_spread"] = self.gang_spread
+        return row
 
 
 @dataclasses.dataclass
@@ -346,6 +392,9 @@ class Cluster:
         migration_window: int = 8,
         scheduler_kwargs: Optional[Dict] = None,
         retime: str = "incremental",
+        gang_reserve_after_s: float = 8.0,
+        gang_placement: str = "colocate",
+        gang_link: Optional[LinkModel] = None,
     ):
         """``devices`` entries are ``(name, mode)`` — the default SKU — or
         ``(name, mode, sku)`` for a heterogeneous-generation fleet
@@ -359,13 +408,27 @@ class Cluster:
         admission-queue scans that cannot succeed; ``"full"`` re-runs the
         complete scheduling model on every event — the reference path the
         equivalence suite (tests/test_retime_equivalence.py) holds the
-        fast one byte-identical to."""
+        fast one byte-identical to.
+
+        ``gang_reserve_after_s`` is the gang starvation bound: how long a
+        queued gang waits unplaced before a GANG_RESERVE event grants it
+        the queue's device reservation. ``gang_placement`` selects the
+        placement search's preference — ``"colocate"`` (default; fewest
+        devices, the comm-cheap shape) or ``"scatter"`` (one member per
+        device — the baseline benchmarks/report.py's gang table prices
+        against). ``gang_link`` overrides the link cost model
+        (core/gang/comms.py)."""
         if policy not in ("static", "adaptive", "planner"):
             raise ValueError(f"unknown policy {policy!r}")
         if retime not in ("incremental", "full"):
             raise ValueError(f"unknown retime mode {retime!r}")
+        if gang_placement not in ("colocate", "scatter"):
+            raise ValueError(f"unknown gang_placement {gang_placement!r}")
         self.policy = policy
         self.retime = retime
+        self.gang_reserve_after_s = float(gang_reserve_after_s)
+        self.gang_placement = gang_placement
+        self.gang_link = gang_link if gang_link is not None else DEFAULT_LINK
         self.reconfig_cost_s = float(reconfig_cost_s)
         self.migration_cooldown_s = float(migration_cooldown_s)
         self.migration_hysteresis = float(migration_hysteresis)
@@ -415,6 +478,9 @@ class Cluster:
         self._shared_steps_cache: Dict[Tuple, Tuple[float, ...]] = {}
         self._busy_cache: Dict[Tuple, float] = {}
         self._unplaceable_cache: Dict[Tuple, Optional[str]] = {}
+        # gang arrival capacity memo (incremental engine), keyed like
+        # _unplaceable_cache plus the gang shape — see _gang_unplaceable
+        self._gang_capacity_cache: Dict[Tuple, int] = {}
         self._trial_reps: Optional[
             List[Tuple[CollocationScheduler, Tuple[CollocationMode, ...]]]
         ] = None
@@ -512,6 +578,8 @@ class Cluster:
             self._on_failure(ev.payload[0], ev.payload[1], t)
         elif ev.kind == EventKind.REPAIR:
             self._on_repair(ev.payload[0], ev.payload[1], t)
+        elif ev.kind == EventKind.GANG_RESERVE:
+            self._on_gang_reserve(ev.payload[0], t)
         self._flush_if_due()
         return ev
 
@@ -575,7 +643,10 @@ class Cluster:
 
     def _on_arrival(self, name: str, t: float) -> None:
         cj = self.jobs[name]
-        reason = self._definitely_unplaceable(cj.spec)
+        if cj.world_size > 1:
+            reason = self._gang_unplaceable(cj)
+        else:
+            reason = self._definitely_unplaceable(cj.spec)
         if reason is not None:
             cj.rejected_reason = reason
             self.rejected.append((name, reason))
@@ -590,6 +661,9 @@ class Cluster:
         if cj.token != token or name not in dev.running:
             return  # stale event — the job was re-timed, migrated, or killed
         cj.pending_event = None  # this event; it just left the heap
+        if cj.world_size > 1:
+            self._finish_gang(cj, t)
+            return
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
         cj.steps_done = float(cj.total_steps)  # clamp fp residue
@@ -602,6 +676,28 @@ class Cluster:
         if dev.mode != CollocationMode.MIG and dev.running:
             # a departure lowers the contention factors for every neighbour
             self._retime_shared(dev, t)
+        self._dispatch(t)
+        self._maybe_migrate(t)
+
+    def _finish_gang(self, cj: "ClusterJob", t: float) -> None:
+        """Gang completion: every member device frees its slice at once —
+        the lifecycle event lives on the primary (rank-0) device, but the
+        gang occupies all of ``member_devices``."""
+        for dname in dict.fromkeys(cj.member_devices):
+            d = self.devices[dname]
+            self._accrue_busy(d, t)
+            self._update_progress(d, t)
+        cj.steps_done = float(cj.total_steps)  # clamp fp residue
+        cj.finished_s = t
+        cj.device = None
+        for rank, dname in enumerate(cj.member_devices):
+            d = self.devices[dname]
+            d.running.pop(cj.name, None)
+            d.assignments.pop(member_name(cj.name, rank), None)
+        cj.member_devices = ()
+        self.completed.append(cj.name)
+        self._capacity_epoch += 1
+        # members are MIG-only: no shared neighbours to re-time
         self._dispatch(t)
         self._maybe_migrate(t)
 
@@ -622,6 +718,13 @@ class Cluster:
             cj.steps_done = float(boundary)
         cj.phase_transitions += 1
         if dev.mode == CollocationMode.MIG:
+            if cj.world_size > 1:
+                # every member re-prices at the new demand; the gang step
+                # is the slowest member plus the (unchanged-placement)
+                # communication overhead
+                self._reprice_gang(cj, t)
+                self._maybe_migrate(t)
+                return
             # isolation (F3): only this job's own step time changes
             a = dev.assignments[name]
             cj.step_s = dev.scheduler.predict_step(
@@ -669,9 +772,19 @@ class Cluster:
             ]
             survivor_names = set()
         killed_names = []
+        hit_gangs: List[str] = []
         for spec in killed_specs:
             killed_names.append(spec.name)
+            gang = getattr(spec, "gang", None)
+            if gang is not None:
+                # a member spec: the whole gang dies with it — widen the
+                # kill to the gang's other devices and re-queue it once
+                if gang not in hit_gangs:
+                    hit_gangs.append(gang)
+                continue
             self._displace(dev, spec.name, t, new_spec=spec)
+        for gang in hit_gangs:
+            self._requeue_gang(self.jobs[gang], t)
         self.failure_events.append(
             {
                 "t_s": t,
@@ -808,10 +921,13 @@ class Cluster:
         for entry in entries:
             cj = entry.item
             placed = False
-            for dev in self.devices.values():
-                if self._try_place(dev, cj, t):
-                    placed = True
-                    break
+            if cj.world_size > 1:
+                placed = self._try_place_gang(cj, t)
+            else:
+                for dev in self.devices.values():
+                    if self._try_place(dev, cj, t):
+                        placed = True
+                        break
             if placed:
                 self.queue.remove(entry.key)
                 if cj.started_s is None:
@@ -841,6 +957,8 @@ class Cluster:
     def _try_place(self, dev: DeviceState, cj: ClusterJob, t: float) -> bool:
         if not dev.available(t):
             return False
+        if self.queue.reserved_against(cj.name, dev.name):
+            return False  # held for a starved gang — backfill must not refill
         if dev.mode == CollocationMode.MIG:
             sched = dev.scheduler.schedule(
                 [cj.spec],
@@ -931,6 +1049,311 @@ class Cluster:
         cj.step_s = a.predicted_step_s
         cj.last_update_s = t
         self._schedule_next_event(dev, cj, t)
+
+    # -- gang scheduling (core/gang/) -------------------------------------------
+
+    def _member_specs(self, cj: ClusterJob) -> List[Workload]:
+        """Per-rank member specs: the gang's workload re-labelled
+        ``name#r<rank>`` with ``gang`` set, so admission prices the member
+        memory fraction (workload.peak_demand_multiplier) and
+        elastic.split_by_failure can map a hit member back to its gang."""
+        wl = as_workload(cj.spec)
+        return [
+            dataclasses.replace(wl, name=member_name(cj.name, r), gang=cj.name)
+            for r in range(cj.world_size)
+        ]
+
+    def _gang_collective_s(self, cj: ClusterJob, dev: DeviceState) -> float:
+        """Per-step collective seconds the comms model scales per axis: the
+        full-device solo record's collective term under the gang's active
+        demand — inter-member traffic tracks the whole job's collective
+        volume, not the member-scaled busy terms."""
+        rec = dev.scheduler.char_db.get(
+            (cj.spec.arch, cj.spec.suite.name, dev.sku.full_profile)
+        )
+        if rec is None:
+            return 0.0
+        return float(rec.get("collective_s", 0.0)) * cj.active_demand().collective
+
+    def _gang_devices(self, cj: ClusterJob, t: float) -> List[DeviceState]:
+        """MIG devices the gang may place on right now, fleet order."""
+        return [
+            dev
+            for dev in self.devices.values()
+            if dev.mode == CollocationMode.MIG
+            and dev.available(t)
+            and not self.queue.reserved_against(cj.name, dev.name)
+        ]
+
+    def _try_place_gang(self, cj: ClusterJob, t: float) -> bool:
+        """All-or-nothing gang placement: probe every eligible device's
+        member capacity under its current occupancy, hand the capacity
+        vector to the placement search (core/gang/placement.py), and bind
+        the winning plan — or note the gang blocked (starting the
+        starvation-bound clock) and place nothing."""
+        members = self._member_specs(cj)
+        mdemand = member_demand(cj.spec, cj.active_demand())
+        devs = self._gang_devices(cj, t)
+        if not devs:
+            self._gang_note_blocked(cj, t)
+            return False
+        active = {m.name: mdemand for m in members}
+        snapshots = [(d, dict(d.scheduler._predicted)) for d in devs]
+        try:
+
+            def trial(dev: DeviceState, chunk: List[Workload]):
+                return dev.scheduler.schedule(
+                    chunk,
+                    blocked_units=frozenset(dev.failed_units),
+                    mode=CollocationMode.MIG,
+                    existing=[a.placement for a in dev.assignments.values()],
+                    active_phases={m.name: active[m.name] for m in chunk},
+                )
+
+            caps = [len(trial(d, members).assignments) for d in devs]
+
+            def probe(idx: int, ranks: Sequence[int]):
+                chunk = [members[r] for r in ranks]
+                sched = trial(devs[idx], chunk)
+                if len(sched.assignments) != len(chunk):
+                    return None
+                by_name = {a.job.name: a for a in sched.assignments}
+                return [
+                    (by_name[m.name].placement, by_name[m.name].predicted_step_s)
+                    for m in chunk
+                ]
+
+            plan = plan_gang(
+                resolve_parallelism(cj.spec),
+                [d.name for d in devs],
+                caps,
+                probe,
+                self._gang_collective_s(cj, devs[0]),
+                prefer=self.gang_placement,
+                link=self.gang_link,
+            )
+        finally:
+            # trial schedules must not leave straggler predictions behind
+            for d, snap in snapshots:
+                d.scheduler._predicted = snap
+        if plan is None:
+            self._gang_note_blocked(cj, t)
+            return False
+        self._bind_gang(cj, members, plan, t)
+        return True
+
+    def _bind_gang(
+        self, cj: ClusterJob, members: List[Workload], plan: GangPlan, t: float
+    ) -> None:
+        """Bind every member to its planned slice. The gang is ONE
+        ClusterJob registered in each member device's running map (the
+        progress guard makes the multi-registration idempotent); its
+        single lifecycle event lives on the primary (rank-0) device."""
+        for slot in plan.slots:
+            dev = self.devices[slot.device]
+            self._accrue_busy(dev, t)
+            dev.assignments[member_name(cj.name, slot.rank)] = Assignment(
+                members[slot.rank], slot.placement, slot.step_s
+            )
+            dev.running[cj.name] = cj
+        cj.member_devices = plan.devices
+        cj.gang_spread = plan.spread
+        cj.device = plan.slots[0].device
+        cj.step_s = plan.step_s
+        cj.last_update_s = t
+        # the reservation veto (if this gang held one) lifts when the
+        # dispatcher removes the entry — blocked singletons may fit again
+        self._capacity_epoch += 1
+        self._schedule_next_event(self.devices[cj.device], cj, t)
+
+    def _reprice_gang(self, cj: ClusterJob, t: float) -> None:
+        """Phase transition on a gang: re-price every member at the new
+        demand vector and re-derive the comm-priced gang step. Placements
+        do not move — only the demand changed (F3 per member slice)."""
+        mdemand = member_demand(cj.spec, cj.active_demand())
+        steps = []
+        rank_device: Dict[int, str] = {}
+        for rank, dname in enumerate(cj.member_devices):
+            d = self.devices[dname]
+            a = d.assignments[member_name(cj.name, rank)]
+            step = d.scheduler.predict_step(a.job, a.profile, mdemand)
+            a.predicted_step_s = step
+            steps.append(step)
+            rank_device[rank] = dname
+        primary = self.devices[cj.member_devices[0]]
+        cj.step_s = gang_step_s(
+            steps,
+            resolve_parallelism(cj.spec),
+            rank_device,
+            self._gang_collective_s(cj, primary),
+            self.gang_link,
+        )
+        self._schedule_next_event(primary, cj, t)
+
+    def _requeue_gang(self, cj: ClusterJob, t: float) -> None:
+        """Gang-wide failure re-queue: one member's slice died, so every
+        surviving member is torn down on its device and the gang re-enters
+        the queue once, priority-bumped, rolled back to its last
+        coordinated checkpoint — members advance in lockstep, so a partial
+        gang can make no progress."""
+        for dname in dict.fromkeys(cj.member_devices):
+            d = self.devices[dname]
+            self._accrue_busy(d, t)
+            self._update_progress(d, t)
+        for rank, dname in enumerate(cj.member_devices):
+            d = self.devices[dname]
+            d.running.pop(cj.name, None)
+            d.assignments.pop(member_name(cj.name, rank), None)
+        cj.member_devices = ()
+        cj.rollback_to_checkpoint()
+        cj.token += 1
+        if cj.pending_event is not None:
+            self.events.tombstone(cj.pending_event)
+            cj.pending_event = None
+        cj.device = None
+        cj.spec = dataclasses.replace(
+            cj.spec, priority=cj.spec.priority + REQUEUE_PRIORITY_BUMP
+        )
+        cj.gang_requeues += 1
+        self._capacity_epoch += 1
+        self._enqueue(cj.name, cj, t)
+
+    # -- gang starvation bound (reserve-or-release) ----------------------------
+
+    def _gang_note_blocked(self, cj: ClusterJob, t: float) -> None:
+        """A gang just failed a placement pass: start the starvation-bound
+        clock (once). Holders of the reservation simply keep waiting for
+        their reserved devices to drain — the heartbeat re-check is driven
+        by the GANG_RESERVE event itself."""
+        if not cj.gang_reserve_pending and self.queue.reserved_by != cj.name:
+            self._push_gang_reserve(cj, t)
+
+    def _push_gang_reserve(self, cj: ClusterJob, t: float) -> None:
+        if cj.gang_reserve_pending:
+            return
+        cj.gang_reserve_pending = True
+        self.events.push(
+            t + self.gang_reserve_after_s, EventKind.GANG_RESERVE, (cj.name,)
+        )
+
+    def _on_gang_reserve(self, name: str, t: float) -> None:
+        """The starvation bound elapsed for a queued gang: grant it the
+        admission queue's (exclusive) device reservation so backfilling
+        singletons stop refilling the capacity it needs, then re-drain.
+        Re-fires as a heartbeat while the gang waits — re-checking (and
+        widening) the reserved set against failures, and rejecting the
+        gang outright if the fleet can no longer host it at all."""
+        cj = self.jobs.get(name)
+        if cj is None:
+            return
+        cj.gang_reserve_pending = False
+        if name not in self.queue or cj.device is not None:
+            return  # stale: the gang placed (or was rejected) while waiting
+        if self.queue.reserved_by not in (None, name):
+            # another gang holds the claim (it was blocked first); retry
+            # after its reservation resolves
+            self._push_gang_reserve(cj, t)
+            return
+        devices = self._gang_reservation_set(cj)
+        if devices is None:
+            self._reject_queued_gang(
+                cj,
+                "gang capacity lost: surviving MIG devices cannot host "
+                f"{cj.world_size} members even when empty",
+                t,
+            )
+            return
+        self.queue.reserve(name, devices)
+        self._capacity_epoch += 1
+        self._push_gang_reserve(cj, t)  # heartbeat until placed/rejected
+        self._dispatch(t)
+
+    def _reject_queued_gang(self, cj: ClusterJob, reason: str, t: float) -> None:
+        self.queue.remove(cj.name)  # releases any reservation it held
+        cj.rejected_reason = reason
+        self.rejected.append((cj.name, reason))
+        self._capacity_epoch += 1  # a released reservation re-opens devices
+        self._dispatch(t)
+
+    def _gang_member_capacity(
+        self, dev: DeviceState, members: List[Workload], mdemand, *, blocked
+    ) -> int:
+        """How many gang members an *empty* tree of this device could host
+        (its running jobs drain; ``blocked`` carries the failed units)."""
+        if dev.mode != CollocationMode.MIG:
+            return 0
+        snapshot = dict(dev.scheduler._predicted)
+        try:
+            sched = dev.scheduler.schedule(
+                members,
+                blocked_units=frozenset(blocked),
+                mode=CollocationMode.MIG,
+                active_phases={m.name: mdemand for m in members},
+            )
+            return len(sched.assignments)
+        finally:
+            dev.scheduler._predicted = snapshot
+
+    def _gang_reservation_set(self, cj: ClusterJob) -> Optional[List[str]]:
+        """The concrete device set reserved for a starved gang: the fewest
+        devices (capacity-descending, fleet order on ties) whose empty
+        trees — minus currently failed units — cover ``world_size``
+        members. None when the surviving fleet cannot cover the gang."""
+        members = self._member_specs(cj)
+        mdemand = member_demand(cj.spec, cj.active_demand())
+        caps = [
+            (
+                self._gang_member_capacity(
+                    dev, members, mdemand, blocked=dev.failed_units
+                ),
+                i,
+                dev.name,
+            )
+            for i, dev in enumerate(self.devices.values())
+        ]
+        caps.sort(key=lambda c: (-c[0], c[1]))
+        chosen: List[str] = []
+        left = cj.world_size
+        for cap, _, dname in caps:
+            if left <= 0:
+                break
+            if cap <= 0:
+                break  # sorted: nothing useful follows
+            chosen.append(dname)
+            left -= cap
+        return chosen if left <= 0 else None
+
+    def _gang_unplaceable(self, cj: ClusterJob) -> Optional[str]:
+        """Arrival-time gang rejection: the fleet's *pristine* MIG trees
+        (no failed units — the repair path may heal) must be able to host
+        every member at once. Shared-only fleets reject gangs outright —
+        members need slice isolation. Memoized per (SKU composition is
+        fixed) gang shape under the incremental engine, mirroring
+        _definitely_unplaceable."""
+        spec = cj.spec
+        key = (
+            spec.arch,
+            spec.suite.name,
+            getattr(spec, "min_profile", None),
+            peak_demand_multiplier(spec),
+            cj.world_size,
+        )
+        if self.retime == "incremental" and key in self._gang_capacity_cache:
+            total = self._gang_capacity_cache[key]
+        else:
+            members = self._member_specs(cj)
+            mdemand = member_demand(cj.spec, cj.active_demand())
+            total = sum(
+                self._gang_member_capacity(dev, members, mdemand, blocked=())
+                for dev in self.devices.values()
+            )
+            self._gang_capacity_cache[key] = total
+        if total >= cj.world_size:
+            return None
+        return (
+            f"gang unplaceable: fleet MIG capacity {total} member slices "
+            f"< world_size {cj.world_size}"
+        )
 
     def _retime_shared(self, dev: DeviceState, t: float) -> None:
         """Re-price a shared device after a departure or a neighbour's
@@ -1228,10 +1651,23 @@ class Cluster:
                 # current partitioning, so reconfiguring (and killing the
                 # running jobs back to their checkpoints) cannot pay off
                 continue
-            specs = [j.spec for j in dev.running.values()] + [
+            if any(j.world_size > 1 for j in dev.running.values()):
+                # a gang member's slice must not be re-partitioned from
+                # under the gang — its siblings on other devices would
+                # stall; gang capacity changes only through completion,
+                # failure, or the gang's own re-queue
+                continue
+            # gangs are placed by the all-or-nothing gang path, never by a
+            # single device's mode trial — exclude them from the pressure
+            # window (a gang-only queue is no reason to flip this device)
+            queued_specs = [
                 e.item.spec
                 for e in self.queue.ordered()[: self.migration_window]
+                if e.item.world_size == 1
             ]
+            if not queued_specs:
+                continue
+            specs = [j.spec for j in dev.running.values()] + queued_specs
             if not specs:
                 continue
             if dev.running and t - dev.last_migration_s < self.migration_cooldown_s:
@@ -1337,13 +1773,17 @@ class Cluster:
                 return  # drained by a replan committed on an earlier device
             if dev.mode != CollocationMode.MIG or not dev.available(t):
                 continue
+            if any(j.world_size > 1 for j in dev.running.values()):
+                continue  # never re-partition a gang member's device
             if dev.running and t - dev.last_migration_s < self.migration_cooldown_s:
                 continue
             # recomputed per device on purpose: a committed replan above
-            # removed its placed jobs from the queue
+            # removed its placed jobs from the queue. Gangs are placed by
+            # the all-or-nothing gang path, not a one-device replan.
             queued = [
                 e.item
                 for e in self.queue.ordered()[: self.migration_window]
+                if e.item.world_size == 1
             ]
             specs = [j.spec for j in dev.running.values()] + [
                 j.spec for j in queued
@@ -1483,6 +1923,9 @@ class Cluster:
         cj = self.jobs.get(job_name)
         if cj is None or cj.device is None:
             return
+        if cj.world_size > 1:
+            return  # gangs pace at the slowest member + comms; there is no
+            # single bigger slice a straggler repack could move them to
         dev = self.devices[cj.device]
         dev.scheduler.observe_step(job_name, step_s)
         if dev.mode != CollocationMode.MIG:

@@ -48,11 +48,25 @@ def split_by_failure(
     re-queue semantics both ``ElasticController.repack`` and the cluster's
     FAILURE event handler apply. Survivors are returned untouched (F3: their
     instances never intersected the failed units, so they keep running).
+
+    Gang members (specs carrying ``gang``) fail collectively: a gang
+    advances in lockstep, so losing one member stalls the rest — any
+    member whose span intersects the failed units drags its same-device
+    siblings into the killed set too, never leaving them behind as
+    orphans to be silently re-timed. The cluster's FAILURE handler then
+    widens the kill to the gang's *other* devices and re-queues the gang
+    once (core/cluster.py).
     """
+    hit_gangs: Set[str] = set()
+    for a in assignments:
+        gang = getattr(a.job, "gang", None)
+        if gang and span_units(a.placement, sku) & failed:
+            hit_gangs.add(gang)
     killed: List[JobSpec] = []
     survivors: List[Assignment] = []
     for a in assignments:
-        if span_units(a.placement, sku) & failed:
+        gang = getattr(a.job, "gang", None)
+        if span_units(a.placement, sku) & failed or (gang in hit_gangs):
             killed.append(
                 dataclasses.replace(a.job, priority=a.job.priority + REQUEUE_PRIORITY_BUMP)
             )

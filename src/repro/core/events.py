@@ -16,6 +16,11 @@ event heap. Everything that changes cluster state is an event:
                  shared devices re-time every neighbour and the adaptive
                  policy gets a chance to reconsider the partitioning.
                  Token-invalidated exactly like COMPLETION.
+  GANG_RESERVE   a queued gang (core/gang/) has waited out the cluster's
+                 starvation bound without placing; the handler grants it
+                 the admission queue's device reservation so backfilling
+                 singletons stop refilling the capacity it needs. Fired
+                 only for gang jobs, so traces without gangs never see it.
 
 Determinism contract: events at equal times are processed in push order
 (``seq`` breaks ties), so a run is a pure function of the submitted trace —
@@ -55,6 +60,7 @@ class EventKind(str, enum.Enum):
     FAILURE = "failure"
     REPAIR = "repair"
     PHASE_TRANSITION = "phase_transition"
+    GANG_RESERVE = "gang_reserve"
 
 
 @dataclasses.dataclass(frozen=True)

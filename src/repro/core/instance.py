@@ -30,6 +30,7 @@ from repro.telemetry.hlo import collective_summary, hlo_flops_bytes
 
 if TYPE_CHECKING:  # jax/mesh machinery only needed by InstanceRuntime —
     # kept import-lazy so the scheduler/cluster stack stays jax-free
+    from repro.core.gang.parallelism import Parallelism
     from repro.core.partitioner import InstanceMesh
 
 
@@ -56,6 +57,31 @@ class JobSpec:
     # floor on the MIG profile the scheduler may pick — set by the straggler
     # repack path so a re-queued straggler lands on a larger slice
     min_profile: Optional[str] = None
+    # gang scheduling (core/gang/): > 1 makes this a gang of cooperating
+    # members, each needing its own MIG slice, admitted all-or-nothing
+    world_size: int = 1
+    # how the gang splits its work (tensor/pipeline/data); None = plain
+    # data parallelism over world_size (core/gang/parallelism.py)
+    parallelism: Optional["Parallelism"] = None
+    # gang this spec is a *member* of — set only on the per-rank specs the
+    # cluster binds to slices, so elastic.split_by_failure can map a hit
+    # member back to its gang; user-submitted jobs leave it None
+    gang: Optional[str] = None
+
+    def __post_init__(self):
+        if self.world_size < 1:
+            raise ValueError(
+                f"job {self.name!r}: world_size must be >= 1, "
+                f"got {self.world_size}"
+            )
+        if self.parallelism is not None and (
+            self.parallelism.world_size != self.world_size
+        ):
+            raise ValueError(
+                f"job {self.name!r}: parallelism {self.parallelism.label} "
+                f"implies world_size {self.parallelism.world_size}, "
+                f"declared {self.world_size}"
+            )
 
 
 @dataclasses.dataclass

@@ -16,12 +16,24 @@ options below what the empty device offers, and the paper's queueing-delay
 comparison only needs work-conserving admission, not starvation-freedom
 guarantees. ``hol_blocked_events`` counts how often backfill overtook a
 blocked head — a cheap observability hook for the rigidity analysis.
+
+Gang jobs (core/gang/) are the one exception to "no reservations": an
+all-or-nothing k-slice gang CAN be starved by a work-conserving backfill
+stream — singletons keep landing on the devices it needs, and capacity
+never coincides. After a gang has waited out the cluster's starvation
+bound, the dispatcher reserves a concrete device set for it here
+(:meth:`reserve`); the dispatcher then refuses to backfill singletons
+onto reserved devices, so the set drains and the gang places. At most
+one gang holds reservations at a time (the oldest blocked one — that is
+what makes the protocol deadlock-free), and a reservation is released
+deterministically the moment its gang places or is rejected
+(:meth:`release`).
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, FrozenSet, List, Optional
 
 
 @dataclasses.dataclass
@@ -52,6 +64,12 @@ class AdmissionQueue:
         self._seq = 0
         self.hol_blocked_events = 0
         self.peak_depth = 0
+        # gang reservation state: at most one (gang key, device names)
+        # pair at a time — see the module docstring's starvation protocol
+        self._reserved_by: Optional[str] = None
+        self._reserved_devices: FrozenSet[str] = frozenset()
+        self.reservations_made = 0
+        self.reservations_released = 0
 
     def push(self, key: str, item: Any, *, priority: int, enqueued_s: float) -> QueueEntry:
         if key in self._entries:
@@ -65,6 +83,7 @@ class AdmissionQueue:
         return e
 
     def remove(self, key: str) -> QueueEntry:
+        self.release(key)  # leaving the queue always frees the claim
         e = self._entries.pop(key)
         # sort_key ends in the unique push seq, so bisect lands exactly on e
         i = bisect.bisect_left(self._sorted, e.sort_key(), key=QueueEntry.sort_key)
@@ -85,6 +104,48 @@ class AdmissionQueue:
 
     def note_backfill_overtake(self) -> None:
         self.hol_blocked_events += 1
+
+    # -- gang reservations ------------------------------------------------
+
+    def reserve(self, key: str, devices) -> None:
+        """Reserve ``devices`` for queued gang ``key``. Exclusive: a second
+        gang may not reserve until the first's claim is released — queue
+        order decides who reserves, which keeps the protocol deadlock-free.
+        Re-reserving by the holder replaces its device set (the dispatcher
+        widens a reservation when failures shrink a reserved device)."""
+        if key not in self._entries:
+            raise KeyError(f"{key!r} is not queued")
+        if self._reserved_by is not None and self._reserved_by != key:
+            raise ValueError(
+                f"{self._reserved_by!r} already holds the reservation"
+            )
+        self._reserved_by = key
+        self._reserved_devices = frozenset(devices)
+        self.reservations_made += 1
+
+    def release(self, key: str) -> bool:
+        """Drop ``key``'s reservation if it holds one; True if it did.
+        Idempotent — rejection and placement paths may both call it."""
+        if self._reserved_by != key:
+            return False
+        self._reserved_by = None
+        self._reserved_devices = frozenset()
+        self.reservations_released += 1
+        return True
+
+    @property
+    def reserved_by(self) -> Optional[str]:
+        return self._reserved_by
+
+    def reserved_against(self, key: str, device: str) -> bool:
+        """Is ``device`` reserved for a job other than ``key``? The
+        dispatcher's backfill veto: singletons (and other gangs) must not
+        land on a reserved device."""
+        return (
+            self._reserved_by is not None
+            and self._reserved_by != key
+            and device in self._reserved_devices
+        )
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -45,8 +45,8 @@ change that is *not* phase-gated: the MPS dispatch-queue latency factor
 demand saturates — that is the mechanism change, not an adapter leak.
 
 Import discipline: this module is part of the jax-free scheduling stack
-(see tests/test_jax_free_core.py) — it may import core/instance.py and
-core/sharing.py only.
+(see tests/test_jax_free_core.py) — it may import core/instance.py,
+core/sharing.py, and core/gang/parallelism.py only.
 """
 from __future__ import annotations
 
@@ -55,6 +55,12 @@ import enum
 from typing import Mapping, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ShapeSuite
+from repro.core.gang.parallelism import (
+    Parallelism,
+    gang_world_size,
+    member_memory_fraction,
+    resolve_parallelism,
+)
 from repro.core.instance import JobSpec
 
 
@@ -177,6 +183,16 @@ class Workload:
     min_profile: Optional[str] = None
     # SERVE objective: per-step latency target on latency-sensitive steps
     slo_step_s: Optional[float] = None
+    # gang scheduling (core/gang/): > 1 => this job runs as world_size
+    # cooperating members, each on its own MIG slice, admitted
+    # all-or-nothing; parallelism describes the tensor/pipeline/data
+    # split (None = plain data parallelism over world_size)
+    world_size: int = 1
+    parallelism: Optional[Parallelism] = None
+    # gang this workload is a *member* of — set only on the per-rank specs
+    # the cluster binds to slices (mirrors JobSpec.gang); user-submitted
+    # workloads leave it None
+    gang: Optional[str] = None
 
     def __post_init__(self):
         if not self.phases:
@@ -186,6 +202,19 @@ class Workload:
             raise ValueError(
                 f"workload {self.name!r}: at most one elastic phase, "
                 f"got {elastic}"
+            )
+        if self.world_size < 1:
+            raise ValueError(
+                f"workload {self.name!r}: world_size must be >= 1, "
+                f"got {self.world_size}"
+            )
+        if self.parallelism is not None and (
+            self.parallelism.world_size != self.world_size
+        ):
+            raise ValueError(
+                f"workload {self.name!r}: parallelism "
+                f"{self.parallelism.label} implies world_size "
+                f"{self.parallelism.world_size}, declared {self.world_size}"
             )
 
     @property
@@ -303,6 +332,9 @@ def from_jobspec(spec: JobSpec) -> Workload:
         phases=(Phase("steady", STEADY_DEMAND, None),),
         priority=spec.priority,
         min_profile=spec.min_profile,
+        world_size=spec.world_size,
+        parallelism=spec.parallelism,
+        gang=spec.gang,
     )
 
 
@@ -316,10 +348,36 @@ def as_workload(job: Union[JobSpec, Workload]) -> Workload:
 
 
 def peak_demand_multiplier(job: Union[JobSpec, Workload]) -> float:
-    """Phase-peak memory multiplier for admission; 1.0 for flat JobSpecs."""
-    if isinstance(job, Workload):
-        return job.peak_demand_multiplier
-    return 1.0
+    """Phase-peak memory multiplier for admission; 1.0 for flat JobSpecs.
+
+    For gang members (``world_size > 1``) the phase peak is further scaled
+    by the member memory fraction (core/gang/parallelism.py): one member
+    budgets only its shard of the model state, which is exactly what lets
+    a job no single slice admits run as a gang of smaller slices."""
+    base = job.peak_demand_multiplier if isinstance(job, Workload) else 1.0
+    if gang_world_size(job) > 1:
+        base *= member_memory_fraction(resolve_parallelism(job))
+    return base
+
+
+def member_demand(job: Union[JobSpec, Workload], demand: DemandTrace) -> DemandTrace:
+    """One gang member's demand vector for an active phase: busy-time
+    terms divide by ``world_size`` (the work is split), the collective
+    term survives untouched (members still run the solo program's own
+    collectives — inter-member traffic is priced separately by
+    core/gang/comms.py), and ``mem_bytes`` scales by the member memory
+    fraction. Identity for world_size 1."""
+    ws = gang_world_size(job)
+    if ws <= 1:
+        return demand
+    frac = member_memory_fraction(resolve_parallelism(job))
+    return DemandTrace(
+        compute=demand.compute / ws,
+        memory=demand.memory / ws,
+        collective=demand.collective,
+        latency=demand.latency,
+        mem_bytes=demand.mem_bytes * frac,
+    )
 
 
 # -- record algebra ------------------------------------------------------------

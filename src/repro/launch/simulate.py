@@ -33,6 +33,15 @@ differences are pure policy effects:
                      legal starts greedy first-fit has already blocked —
                      the placement-tree fragmentation the planner fleet
                      avoids (docs/placement.md).
+    gang_pipeline    multi-slice gang jobs (core/gang/) on a mixed
+                     80GB/40GB fleet: qwen2-72b-class trainers that fit
+                     *no* single slice run as world_size-4 tensor+pipeline
+                     gangs spanning two 80GB devices, 2g-class trainers
+                     run as world_size-2 tensor gangs that co-locate on
+                     one device, and singleton filler backfills around the
+                     gangs' all-or-nothing reservations. Opt-in family
+                     (like city_scale) — the default 30-cell grid is
+                     unchanged; see docs/gang_scheduling.md.
 
   policies
     all-mig / all-mps / all-naive   homogeneous static fleets;
@@ -59,11 +68,8 @@ Usage:
                                   [--out artifacts/cluster]
                                   [--scenarios ...] [--policies ...]
 """
-from repro.launch.bootstrap import ensure_host_platform_devices
-
-ensure_host_platform_devices()  # parity with collocate.py for --db reruns
-
 import argparse
+import dataclasses
 import json
 import math
 import random
@@ -76,6 +82,11 @@ from repro.configs.registry import CONFIGS
 from repro.core.cluster import Cluster
 from repro.core.collocation import is_sku_keyed_db
 from repro.core.device import DEFAULT_SKU, SKUS, DeviceSKU, format_gib, get_sku
+from repro.core.gang.parallelism import (
+    PARALLELISMS,
+    Parallelism,
+    resolve_parallelism,
+)
 from repro.core.instance import JobSpec
 from repro.core.sharing import CollocationMode
 from repro.core.workload import Workload, serve_workload, train_workload
@@ -126,6 +137,13 @@ _BASELINE_UNITS = DEFAULT_SKU.n_units
 #: over --devices): the paper's part, its doubled-memory sibling, and the
 #: 4-slice A30 — three placement trees in one cluster.
 HETERO_FLEET_SKUS = ("a100-40gb", "a100-80gb", "a30-24gb")
+
+#: The gang_pipeline fleet (cycled over --devices): the 80GB generation
+#: first so a default 4-device fleet holds two a100-80gb — the only
+#: devices whose 3g/4g slices admit a qwen2-72b tensor+pipeline gang
+#: member, so the world_size-4 gangs *must* span both (docs/
+#: gang_scheduling.md walks the memory math).
+GANG_FLEET_SKUS = ("a100-80gb", "a100-40gb")
 
 _MIX = (  # mixed_dynamic draw weights
     ("resnet_small", 0.35),
@@ -185,6 +203,17 @@ CITY_SCENARIO_HELP = {
                   "with short high-rate bursts — the queue-depth stressor "
                   "cell on the scoreboard",
 }
+# The gang family is opt-in for the same reason as city_scale: its cells
+# carry gang-only schema keys, so keeping it out of the default grid keeps
+# the 30 byte-pinned cells untouched while the equivalence suite still
+# sweeps it (tests/test_retime_equivalence.py runs ALL_SCENARIOS).
+GANG_SCENARIO_HELP = {
+    "gang_pipeline": "multi-slice gangs (world_size 4 tensor+pipeline "
+                     "qwen2-72b + world_size 2 tensor 2g-class) with "
+                     "singleton filler on the 80GB/40GB gang fleet — "
+                     "all-or-nothing admission, co-located beats scattered "
+                     "(core/gang/, docs/gang_scheduling.md)",
+}
 POLICY_HELP = {
     "all-mig": "homogeneous MIG fleet, greedy first-fit placement",
     "all-mps": "homogeneous MPS fleet (spatial sharing)",
@@ -195,8 +224,18 @@ POLICY_HELP = {
 }
 SCENARIOS = tuple(SCENARIO_HELP)
 CITY_SCENARIOS = tuple(CITY_SCENARIO_HELP)
-ALL_SCENARIOS = SCENARIOS + CITY_SCENARIOS
+GANG_SCENARIOS = tuple(GANG_SCENARIO_HELP)
+ALL_SCENARIOS = SCENARIOS + CITY_SCENARIOS + GANG_SCENARIOS
 POLICIES = tuple(POLICY_HELP)
+
+#: gang placement preferences the cluster accepts (core/cluster.py) —
+#: "scatter" exists so the gang report can price the counterfactual.
+GANG_PLACEMENTS = ("colocate", "scatter")
+#: world sizes the registered parallelism descriptors span — the legal
+#: values for --gang-world-size (argparse lists these on a bad value).
+GANG_WORLD_SIZES = tuple(sorted({
+    resolve_parallelism(p).world_size for p in PARALLELISMS
+}))
 
 
 def synthetic_char_db(
@@ -422,6 +461,62 @@ def hetero_sku_trace(
     return trace
 
 
+#: The gang_pipeline headline class: a qwen2-72b-class trainer whose
+#: working set fits *no* single slice in the fleet (xlarge as a train
+#: job), sharded tensor=2 x pipeline=2 into four members that each fit an
+#: 80GB-generation 3g/4g slice — two members per a100-80gb, so the gang
+#: spans both 80GB devices all-or-nothing.
+GANG_XLARGE_PARALLELISM = Parallelism(tensor=2, pipeline=2)
+
+
+def _gang_train(name: str, arch: str, par: Parallelism) -> Workload:
+    """A phase-aware training gang: ``train_workload``'s warmup/steady/
+    checkpoint plan with the gang descriptor stamped on (the registry
+    helpers build singletons; gangs are the same plan, wider)."""
+    return dataclasses.replace(
+        train_workload(name, arch, SIM_SUITE, warmup_steps=5, checkpoint_steps=3),
+        world_size=par.world_size,
+        parallelism=par,
+    )
+
+
+def gang_pipeline_trace(
+    rng: random.Random,
+    n_jobs: int,
+    *,
+    mean_interarrival_s: float = 0.05,
+    parallelism: str = "tp2",
+) -> List[TraceItem]:
+    """Multi-slice gangs with singleton filler on one Poisson stream:
+    ~12% qwen2-72b world_size-4 tensor+pipeline gangs (fit *only* as a
+    gang — full-slice-only placement rejects them outright), ~28%
+    2g-class gangs under the ``parallelism`` descriptor (fit everywhere,
+    so the co-located-vs-scattered comparison is theirs to decide), and
+    ~60% slice-aligned / tiny singletons that backfill around the gangs'
+    reservations — the head-of-line pressure the starvation bound caps."""
+    par = resolve_parallelism(parallelism)
+    trace: List[TraceItem] = []
+    t = 0.0
+    for i in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival_s)
+        x = rng.random()
+        if x < 0.12:
+            trace.append(
+                (t, _gang_train(f"gq{i}", "qwen2-72b", GANG_XLARGE_PARALLELISM), 1)
+            )
+        elif x < 0.40:
+            trace.append(
+                (t, _gang_train(f"gs{i}", "stablelm-12b", par), rng.randint(1, 2))
+            )
+        elif x < 0.75:
+            trace.append(
+                (t, JobSpec(f"ga{i}", "granite-3-2b", SIM_SUITE), rng.randint(1, 2))
+            )
+        else:
+            trace.append((t, JobSpec(f"gt{i}", "resnet_small", SIM_SUITE), 1))
+    return trace
+
+
 # The city_scale family: the trace shapes the scoreboard runs at 10^5-10^6
 # arrivals over hundreds of devices (benchmarks/sim_perf.py). Sessions are
 # drawn from archs every fleet mode admits on every registered SKU, so the
@@ -507,7 +602,14 @@ def city_burst_trace(
     return trace
 
 
-def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[TraceItem]:
+def make_trace(
+    scenario: str,
+    seed: int,
+    n_jobs: int,
+    n_devices: int,
+    *,
+    gang_parallelism: str = "tp2",
+) -> List[TraceItem]:
     # fresh, scenario-salted RNG: identical trace for every policy
     rng = random.Random(f"{seed}:{scenario}")
     if scenario == "aligned_static":
@@ -522,6 +624,8 @@ def make_trace(scenario: str, seed: int, n_jobs: int, n_devices: int) -> List[Tr
         return fragmentation_trace(rng, n_jobs, n_devices)
     if scenario == "hetero_sku":
         return hetero_sku_trace(rng, n_jobs)
+    if scenario == "gang_pipeline":
+        return gang_pipeline_trace(rng, n_jobs, parallelism=gang_parallelism)
     if scenario == "city_diurnal":
         return city_diurnal_trace(rng, n_jobs)
     if scenario == "city_burst":
@@ -576,19 +680,34 @@ def run_cell(
     char_db: Optional[Dict] = None,
     sku: str = "a100-40gb",
     retime: str = "incremental",
+    gang_placement: str = "colocate",
+    gang_parallelism: str = "tp2",
+    gang_reserve_after_s: float = 0.5,
+    gang_degrade: bool = False,
 ) -> Dict:
     """One (scenario x policy) simulation; returns the artifact cell dict.
 
     ``sku`` selects the fleet's device generation (--sku); the hetero_sku
-    scenario overrides it with the fixed mixed-generation fleet. When
-    ``char_db`` is None, per-SKU synthetic DBs are built; a flat measured
-    DB (--db) only speaks one SKU's profile names, so it is rejected for
-    any other fleet. ``retime`` selects the cluster's re-pricing engine
-    (--retime): the incremental default or the full reference path — the
-    two must produce byte-identical cells (tests/test_retime_equivalence),
-    so the choice is deliberately not recorded in the artifact schema."""
+    scenario overrides it with the fixed mixed-generation fleet and
+    gang_pipeline with the 80GB-first gang fleet. When ``char_db`` is
+    None, per-SKU synthetic DBs are built; a flat measured DB (--db) only
+    speaks one SKU's profile names, so it is rejected for any other
+    fleet. ``retime`` selects the cluster's re-pricing engine (--retime):
+    the incremental default or the full reference path — the two must
+    produce byte-identical cells (tests/test_retime_equivalence), so the
+    choice is deliberately not recorded in the artifact schema.
+
+    The ``gang_*`` knobs only matter when the trace contains gang jobs
+    (the gang_pipeline family): placement preference and starvation bound
+    are forwarded to the cluster, ``gang_parallelism`` picks the 2g-class
+    gangs' descriptor, and ``gang_degrade`` collapses every gang spec to
+    a world_size-1 singleton — the full-slice-only baseline the gang
+    report prices (benchmarks/report.py gang), under which the qwen2-72b
+    class fits nothing and is rejected instead of sharded."""
     fleet_skus: Tuple[str, ...] = (
-        HETERO_FLEET_SKUS if scenario == "hetero_sku" else (sku,)
+        HETERO_FLEET_SKUS if scenario == "hetero_sku"
+        else GANG_FLEET_SKUS if scenario == "gang_pipeline"
+        else (sku,)
     )
     for name in fleet_skus:
         get_sku(name)  # fail fast on unknown SKU names
@@ -612,8 +731,18 @@ def run_cell(
         reconfig_cost_s=reconfig_cost_s,
         migration_cooldown_s=1.0,
         retime=retime,
+        gang_placement=gang_placement,
+        gang_reserve_after_s=gang_reserve_after_s,
     )
-    trace = make_trace(scenario, seed, n_jobs, n_devices)
+    trace = make_trace(
+        scenario, seed, n_jobs, n_devices, gang_parallelism=gang_parallelism
+    )
+    if gang_degrade:
+        trace = [
+            (t, dataclasses.replace(spec, world_size=1, parallelism=None)
+             if getattr(spec, "world_size", 1) > 1 else spec, epochs)
+            for t, spec, epochs in trace
+        ]
     for arrival_s, spec, epochs in trace:
         cluster.submit(
             spec, arrival_s, epochs=epochs, samples_per_epoch=SIM_SAMPLES_PER_EPOCH
@@ -635,6 +764,11 @@ def run_cell(
         cell["fleet_skus"] = list(fleet_skus)
     elif fleet_skus[0] != "a100-40gb":
         cell["sku"] = fleet_skus[0]
+    if scenario in GANG_SCENARIOS:
+        cell["gang_placement"] = gang_placement
+        cell["gang_parallelism"] = gang_parallelism
+        if gang_degrade:
+            cell["gang_degrade"] = True
     return cell
 
 
@@ -736,6 +870,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="load the char DB from collocate.py artifacts "
                          "instead of the synthetic catalog (a100-40gb "
                          "profile names — default SKU fleets only)")
+    ap.add_argument("--gang-placement", default="colocate",
+                    choices=GANG_PLACEMENTS,
+                    help="gang placement preference (core/gang/placement): "
+                         "pack members onto as few devices as possible "
+                         "(default) or scatter them — the counterfactual "
+                         "the gang report prices (benchmarks/report.py)")
+    ap.add_argument("--gang-parallelism", default="tp2",
+                    choices=sorted(PARALLELISMS),
+                    help="parallelism descriptor for the gang_pipeline "
+                         "scenario's 2g-class gangs (core/gang/"
+                         "parallelism.py registry)")
+    ap.add_argument("--gang-world-size", type=int, default=None,
+                    choices=GANG_WORLD_SIZES,
+                    help="expected world size of the 2g-class gangs; "
+                         "purely a cross-check — it must equal the "
+                         "--gang-parallelism descriptor's world size "
+                         "(world_size is always derived, never free)")
     ap.add_argument("--list", action="store_true",
                     help="print the registered scenarios, fleet policies, "
                          "and device SKUs, and exit")
@@ -748,6 +899,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print("city-scale scenarios (scoreboard family, opt-in via --scenarios):")
         for name, desc in CITY_SCENARIO_HELP.items():
             print(f"  {name:<16} {desc}")
+        print("gang scenarios (multi-slice family, opt-in via --scenarios):")
+        for name, desc in GANG_SCENARIO_HELP.items():
+            print(f"  {name:<16} {desc}")
+        print("gang parameters:")
+        print(f"  placements       {', '.join(GANG_PLACEMENTS)} (--gang-placement)")
+        print("  parallelisms     world_size is derived: tensor x pipeline x data")
+        for pname in sorted(PARALLELISMS):
+            par = resolve_parallelism(pname)
+            print(f"    {pname:<14} {par.label} (world_size {par.world_size})")
         print("fleet policies:")
         for name, desc in POLICY_HELP.items():
             print(f"  {name:<16} {desc}")
@@ -780,6 +940,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         )
     if not scenarios or not policies:
         ap.error("need at least one scenario and one fleet policy")
+    if args.gang_world_size is not None:
+        par = resolve_parallelism(args.gang_parallelism)
+        if args.gang_world_size != par.world_size:
+            ap.error(
+                f"--gang-world-size {args.gang_world_size} does not match "
+                f"--gang-parallelism {args.gang_parallelism} ({par.label}, "
+                f"world_size {par.world_size}); world_size is derived from "
+                "the descriptor — registered choices: "
+                + ", ".join(
+                    f"{p}={resolve_parallelism(p).world_size}"
+                    for p in sorted(PARALLELISMS)
+                )
+            )
     if args.db and args.sku != "a100-40gb":
         ap.error(
             "--db loads a flat measured characterization DB, which speaks "
@@ -789,6 +962,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
+    if args.db:
+        # parity with collocate.py for measured-DB reruns; kept out of
+        # module scope so importing this module (tests, benchmarks) never
+        # mutates XLA_FLAGS before an unrelated jax backend initializes
+        from repro.launch.bootstrap import ensure_host_platform_devices
+
+        ensure_host_platform_devices()
     char_db = (
         load_char_db(Path(args.db))
         if args.db
@@ -798,12 +978,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     summaries: List[Dict] = []
     failures = 0
     for scenario in scenarios:
-        if args.db and scenario == "hetero_sku":
-            # a flat measured DB cannot price the mixed-generation fleet's
+        if args.db and scenario in ("hetero_sku",) + GANG_SCENARIOS:
+            # a flat measured DB cannot price a mixed-generation fleet's
             # per-SKU trees — documented skip, not a failure (the synthetic
             # catalog path still covers the scenario)
             print(
-                "[SKIP] hetero_sku: --db is a flat a100-40gb DB; the "
+                f"[SKIP] {scenario}: --db is a flat a100-40gb DB; the "
                 "mixed-generation fleet needs per-SKU records",
                 flush=True,
             )
@@ -820,6 +1000,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     char_db=char_db,
                     sku=args.sku,
                     retime=args.retime,
+                    gang_placement=args.gang_placement,
+                    gang_parallelism=args.gang_parallelism,
                 )
                 _dump(out_dir / f"{scenario}__{policy}.json", cell)
                 s = summarize_cell(cell)

@@ -1,15 +1,22 @@
 """Admission-queue backfill edge cases (core/queueing.py + the cluster
 dispatcher): the head-of-line job is never delayed by backfillers, the
-EASY-style starvation bound holds once arrivals stop, and the queue's
-empty/duplicate behaviour is exact."""
+EASY-style starvation bound holds once arrivals stop, the queue's
+empty/duplicate behaviour is exact, and the gang reservation protocol —
+exclusive, deterministically released — neither starves gangs nor blocks
+backfillable singletons before the bound."""
+import dataclasses
+
 import pytest
 
 from repro.configs.base import ShapeSuite
 from repro.core.cluster import Cluster
 from repro.core.collocation import _PROFILE_ORDER
+from repro.core.gang.parallelism import Parallelism
 from repro.core.instance import JobSpec
 from repro.core.queueing import AdmissionQueue
 from repro.core.sharing import CollocationMode
+from repro.core.workload import train_workload
+from repro.launch.simulate import SIM_SUITE, synthetic_sku_dbs
 from repro.telemetry.constants import HBM_PER_CHIP
 
 SUITE = ShapeSuite("t", 1024, 32, "train")
@@ -115,6 +122,103 @@ def test_admission_queue_empty_and_duplicate_behaviour():
     assert "a" in q and q.get("a") is not None
     q.remove("a")
     assert "a" not in q and q.get("a") is None
+
+
+def test_reservation_api_exclusive_widening_and_release():
+    q = AdmissionQueue()
+    with pytest.raises(KeyError):
+        q.reserve("ghost", {"d0"})  # only queued jobs may reserve
+    q.push("g1", None, priority=0, enqueued_s=0.0)
+    q.push("g2", None, priority=0, enqueued_s=0.1)
+    q.reserve("g1", {"d0"})
+    assert q.reserved_by == "g1"
+    assert q.reserved_against("g2", "d0") and not q.reserved_against("g1", "d0")
+    assert not q.reserved_against("g2", "d1")  # only the reserved devices
+    with pytest.raises(ValueError):
+        q.reserve("g2", {"d1"})  # exclusive: queue order decides the holder
+    q.reserve("g1", {"d0", "d1"})  # the holder may widen its claim
+    assert q.reserved_against("g2", "d1")
+    assert q.release("g1") and not q.release("g1")  # idempotent
+    assert q.reserved_by is None and not q.reserved_against("g2", "d0")
+    q.reserve("g2", {"d0"})
+    q.remove("g2")  # leaving the queue always frees the claim
+    assert q.reserved_by is None and q.reservations_released == 2
+
+
+# -- gang head-of-line behaviour (core/gang/ + the dispatcher) ---------------------
+
+_GANG_DBS = synthetic_sku_dbs(("a100-80gb",))
+
+
+def _gang(name):
+    par = Parallelism(tensor=2)
+    return dataclasses.replace(
+        train_workload(name, "stablelm-12b", SIM_SUITE),
+        world_size=2, parallelism=par,
+    )
+
+
+def _hol_cluster(reserve_after_s):
+    """One 80GB MIG device, all seven 1g slices occupied: s0 frees its
+    slice first, s1 second, the rest much later — then a world_size-2 gang
+    and a backfillable singleton arrive and contend for the freed slices."""
+    c = Cluster(_GANG_DBS, [("d0", CollocationMode.MIG, "a100-80gb")],
+                gang_reserve_after_s=reserve_after_s)
+    c.submit(JobSpec("s0", "granite-3-2b", SIM_SUITE), 0.0, epochs=1)
+    c.submit(JobSpec("s1", "granite-3-2b", SIM_SUITE), 0.0, epochs=2)
+    for i in range(2, 7):
+        c.submit(JobSpec(f"s{i}", "granite-3-2b", SIM_SUITE), 0.0, epochs=3)
+    c.submit(_gang("gang"), 0.01, epochs=1)
+    c.submit(JobSpec("bf", "granite-3-2b", SIM_SUITE), 0.02, epochs=1)
+    return c
+
+
+def test_waiting_gang_does_not_block_backfill_before_the_bound():
+    """Until the starvation bound expires the queued gang holds nothing:
+    the singleton backfills into the first freed slice (which the gang —
+    needing two — could not use anyway) the moment it opens."""
+    c = _hol_cluster(reserve_after_s=10.0)  # bound far beyond the makespan
+    rep = c.run()
+    rows = {j["name"]: j for j in rep.jobs}
+    assert rows["bf"]["started_s"] == pytest.approx(rows["s0"]["finished_s"])
+    assert rows["bf"]["started_s"] < rows["gang"]["started_s"]
+    assert rep.completed == 9 and rep.still_queued == 0
+    assert c.queue.reservations_made == 0  # the bound never expired
+
+
+def test_reservation_holds_freed_slices_for_the_gang_after_the_bound():
+    """Once the bound expires the gang's reservation vetoes backfill on the
+    reserved device: the freed slices accumulate for the gang (it starts
+    exactly when the second slice frees) and the singleton that would have
+    sniped the first slice now starts after the gang — the deterministic
+    flip side of the backfill test above."""
+    c = _hol_cluster(reserve_after_s=0.05)  # expires before any slice frees
+    rep = c.run()
+    rows = {j["name"]: j for j in rep.jobs}
+    assert c.queue.reservations_made >= 1
+    assert rows["gang"]["started_s"] == pytest.approx(rows["s1"]["finished_s"])
+    assert rows["bf"]["started_s"] >= rows["gang"]["started_s"]
+    assert rep.completed == 9 and rep.still_queued == 0
+    assert c.queue.reserved_by is None  # released on placement, exactly once
+
+
+def test_reservation_released_deterministically_on_rejection():
+    """Fleet degradation while a gang holds the reservation: the next
+    heartbeat finds the surviving capacity below world_size, rejects the
+    gang, and the release is immediate — no reservation outlives its
+    holder to deadlock the queue."""
+    c = Cluster(_GANG_DBS, [("d0", CollocationMode.MIG, "a100-80gb")],
+                gang_reserve_after_s=0.05)
+    for i in range(7):
+        c.submit(JobSpec(f"s{i}", "granite-3-2b", SIM_SUITE), 0.0, epochs=3)
+    c.submit(_gang("gang"), 0.01, epochs=1)
+    c.inject_failure("d0", range(1, 8), 0.1)  # one healthy unit: cap < 2
+    rep = c.run()
+    g = {j["name"]: j for j in rep.jobs}["gang"]
+    assert g["rejected_reason"] is not None and "capacity" in g["rejected_reason"]
+    assert c.queue.reserved_by is None
+    assert c.queue.reservations_released == c.queue.reservations_made >= 1
+    assert rep.still_queued == 0
 
 
 def test_cluster_duplicate_submit_rejected_and_empty_run_is_clean():

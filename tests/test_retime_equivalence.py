@@ -21,6 +21,7 @@ from repro.core.cluster import Cluster
 from repro.core.instance import JobSpec
 from repro.launch.simulate import (
     ALL_SCENARIOS,
+    GANG_FLEET_SKUS,
     HETERO_FLEET_SKUS,
     POLICIES,
     SERVE_SLO_S,
@@ -68,7 +69,11 @@ def test_artifact_cell_bytes_identical(scenario, policy):
 def _drive(scenario, policy, retime, *, seed=0, n_jobs=40, n_devices=2):
     """Run one cell on a bare Cluster with the live-event log enabled;
     returns (event stream, report dict)."""
-    fleet_skus = HETERO_FLEET_SKUS if scenario == "hetero_sku" else ("a100-40gb",)
+    fleet_skus = (
+        HETERO_FLEET_SKUS if scenario == "hetero_sku"
+        else GANG_FLEET_SKUS if scenario == "gang_pipeline"
+        else ("a100-40gb",)
+    )
     devices, cluster_policy = make_fleet(policy, n_devices, fleet_skus)
     cluster = Cluster(
         _DB,
@@ -77,6 +82,10 @@ def _drive(scenario, policy, retime, *, seed=0, n_jobs=40, n_devices=2):
         reconfig_cost_s=0.5,
         migration_cooldown_s=1.0,
         retime=retime,
+        # the gang starvation bound, scaled to the simulator's second-scale
+        # makespans (run_cell uses the same value) — inert for gang-free
+        # traces: GANG_RESERVE events only ever fire for queued gangs
+        gang_reserve_after_s=0.5,
     )
     cluster.event_log = []
     for arrival_s, spec, epochs in make_trace(scenario, seed, n_jobs, n_devices):
