@@ -7,6 +7,7 @@
     PYTHONPATH=src python -m benchmarks.report placement  # planner vs greedy
     PYTHONPATH=src python -m benchmarks.report devices    # cross-SKU verdicts
     PYTHONPATH=src python -m benchmarks.report gang       # gang placement goodput
+    PYTHONPATH=src python -m benchmarks.report autoscale  # forecast vs reactive
 
 All sections render through the shared table renderer
 (benchmarks/common.py:format_table, markdown style).
@@ -392,8 +393,82 @@ def fmt_gang() -> str:
     return f"{head}\n\n{format_table(_GANG_COLUMNS, rows, style='markdown')}"
 
 
+_AUTOSCALE_COLUMNS = (
+    Column("fleet"),
+    Column("slo", "slo attain", fmt="{:.4f}"),
+    Column("goodput", "goodput steps/s", fmt="{:.1f}"),
+    Column("qdelay", "mean qdelay_s", fmt="{:.3f}"),
+    Column("reconfigs"),
+    Column("proactive", "proactive flips"),
+    Column("reactive", "reactive flips"),
+    Column("completed"),
+)
+
+
+def fmt_autoscale() -> str:
+    """Autoscaling verdict table: the same seed-0 diurnal_serve trace
+    (diurnal serve sessions at 10x the train_serve_mix rate over batch
+    training, three synthetic days) on the same hardware under three
+    control regimes —
+
+      reactive-adaptive  the best-mode-per-device policy: flips a device
+                         only after queue pressure from realized SLO
+                         misses builds up (always a step behind the ramp);
+      planner            the partition-tree optimizer's placements with
+                         plan-driven re-partitions — better packing, still
+                         purely reactive;
+      forecast           the adaptive machinery plus forecast-driven
+                         autoscaling (core/forecast/): a seasonal
+                         estimator learns the daily profile from completed
+                         periods and pre-warms decode slices ahead of the
+                         predicted ramp, gated by wave amortization.
+
+    Computed in-process (deterministic, no artifacts needed). The headline
+    inequality — forecast strictly beats reactive-adaptive on SLO
+    attainment with fewer SLO-miss-triggered (reactive) flips — is the
+    tentpole's acceptance bar, pinned by tests/test_forecast.py and CI.
+    Day one of the trace is for learning: the cold-start estimator reports
+    a zero lower band, so the amortization gate blocks every pre-warm
+    until a full period completes (docs/autoscaling.md)."""
+    from repro.launch.simulate import run_cell, summarize_cell
+
+    rows = []
+    for label, policy in (
+        ("reactive-adaptive", "best"),
+        ("planner", "planner"),
+        ("forecast", "forecast"),
+    ):
+        cell = run_cell("diurnal_serve", policy, seed=0)
+        s = summarize_cell(cell)
+        fc = cell["report"].get("forecast") or {}
+        proactive = fc.get("prewarm_flips", 0) + fc.get("prewarm_preempts", 0)
+        reactive = fc.get("reactive_migrations", s["migrations"])
+        rows.append(
+            {
+                "fleet": label,
+                "slo": s["slo_attainment"],
+                "goodput": s["goodput_steps_per_s"],
+                "qdelay": s["mean_queueing_delay_s"],
+                "reconfigs": s["migrations"],
+                "proactive": proactive,
+                "reactive": reactive,
+                "completed": s["completed"],
+            }
+        )
+    head = (
+        "seed-0 diurnal_serve trace (three synthetic days of diurnal serve "
+        "sessions over batch training); only the control regime differs "
+        "per row (docs/autoscaling.md). 'proactive' flips were paid ahead "
+        "of the predicted ramp, 'reactive' ones after realized queue "
+        "pressure — the forecast row trades training goodput (demoted "
+        "into the trough and the tail) for serve SLO."
+    )
+    return f"{head}\n\n{format_table(_AUTOSCALE_COLUMNS, rows, style='markdown')}"
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
     print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate,
            "modes": fmt_modes, "placement": fmt_placement,
-           "devices": fmt_devices, "gang": fmt_gang}[which]())
+           "devices": fmt_devices, "gang": fmt_gang,
+           "autoscale": fmt_autoscale}[which]())

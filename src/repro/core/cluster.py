@@ -113,6 +113,13 @@ from repro.core.device import DEFAULT_SKU, DeviceSKU, get_sku
 from repro.core.device import DEFAULT_RECONFIG_COST_S as _BASE_RECONFIG_COST_S
 from repro.core.elastic import REQUEUE_PRIORITY_BUMP, split_by_failure
 from repro.core.events import Event, EventKind, EventQueue
+from repro.core.forecast import (
+    ForecastConfig,
+    RateForecast,
+    next_tick,
+    plan_autoscale,
+    wave_amortizes,
+)
 from repro.core.gang.comms import DEFAULT_LINK, LinkModel, gang_step_s
 from repro.core.gang.parallelism import (
     gang_world_size,
@@ -362,9 +369,16 @@ class ClusterReport:
     devices: List[Dict]
     migration_events: List[Dict]
     failure_events: List[Dict]
+    # forecast-policy block (estimator + autoscaler counters); None — and
+    # absent from to_dict() — for every other policy, so forecast-free
+    # artifacts stay byte-identical to pre-forecast ones.
+    forecast: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if d.get("forecast") is None:
+            d.pop("forecast", None)
+        return d
 
 
 def _quantile(sorted_vals: List[float], q: float) -> float:
@@ -385,7 +399,7 @@ class Cluster:
             Tuple[str, Union[CollocationMode, str], Union[str, DeviceSKU]],
         ]],
         *,
-        policy: str = "static",  # "static" | "adaptive" | "planner"
+        policy: str = "static",  # "static" | "adaptive" | "planner" | "forecast"
         reconfig_cost_s: float = DEFAULT_RECONFIG_COST_S,
         migration_cooldown_s: float = 5.0,
         migration_hysteresis: float = 0.10,
@@ -395,6 +409,7 @@ class Cluster:
         gang_reserve_after_s: float = 8.0,
         gang_placement: str = "colocate",
         gang_link: Optional[LinkModel] = None,
+        forecast: Optional[ForecastConfig] = None,
     ):
         """``devices`` entries are ``(name, mode)`` — the default SKU — or
         ``(name, mode, sku)`` for a heterogeneous-generation fleet
@@ -417,9 +432,17 @@ class Cluster:
         devices, the comm-cheap shape) or ``"scatter"`` (one member per
         device — the baseline benchmarks/report.py's gang table prices
         against). ``gang_link`` overrides the link cost model
-        (core/gang/comms.py)."""
-        if policy not in ("static", "adaptive", "planner"):
+        (core/gang/comms.py).
+
+        ``forecast`` configures the forecast-driven autoscaler
+        (core/forecast/) and requires ``policy="forecast"`` — that policy
+        keeps the adaptive policy's reactive machinery and adds a
+        FORECAST_TICK clock that pre-warms decode-capable devices ahead
+        of the predicted serve ramp (docs/autoscaling.md)."""
+        if policy not in ("static", "adaptive", "planner", "forecast"):
             raise ValueError(f"unknown policy {policy!r}")
+        if forecast is not None and policy != "forecast":
+            raise ValueError("a forecast config requires policy='forecast'")
         if retime not in ("incremental", "full"):
             raise ValueError(f"unknown retime mode {retime!r}")
         if gang_placement not in ("colocate", "scatter"):
@@ -492,6 +515,31 @@ class Cluster:
         self._blocked_floor_key: Optional[Tuple] = None
         self._pending_entries: List[QueueEntry] = []
         self._next_reopen = float("inf")
+        # -- forecast autoscaling state (policy="forecast" only) -----------
+        self.forecast_config = (
+            forecast
+            if forecast is not None
+            else (ForecastConfig() if policy == "forecast" else None)
+        )
+        self._fc_estimator = (
+            self.forecast_config.build_estimator()
+            if self.forecast_config is not None
+            else None
+        )
+        self._fc_tick_pending = False
+        self._fc_ticks = 0
+        self._fc_last: Optional[RateForecast] = None
+        self._fc_peak_rate = 0.0
+        # latest serve spec seen: the representative the per-device
+        # serve-capacity trials size the warm set against
+        self._fc_serve_rep: Optional[Union[JobSpec, Workload]] = None
+        self._fc_serve_seen = 0
+        self._fc_session_s: Optional[float] = None  # EWMA of serve service time
+        self._fc_capacity_cache: Dict[Tuple, int] = {}
+        self._fc_prewarm_flips = 0
+        self._fc_prewarm_preempts = 0
+        self._fc_reactive = 0
+        self._dev_index = {name: i for i, name in enumerate(self.devices)}
         # set to a list to record the live event stream (time, kind,
         # payload-sans-token) — the equivalence harness's comparison hook
         self.event_log: Optional[List[Tuple]] = None
@@ -580,6 +628,8 @@ class Cluster:
             self._on_repair(ev.payload[0], ev.payload[1], t)
         elif ev.kind == EventKind.GANG_RESERVE:
             self._on_gang_reserve(ev.payload[0], t)
+        elif ev.kind == EventKind.FORECAST_TICK:
+            self._on_forecast_tick(t)
         self._flush_if_due()
         return ev
 
@@ -651,6 +701,8 @@ class Cluster:
             cj.rejected_reason = reason
             self.rejected.append((name, reason))
             return
+        if self._fc_estimator is not None:
+            self._fc_observe_arrival(cj, t)
         self._enqueue(name, cj, t)
         self._dispatch(t)
         self._maybe_migrate(t)
@@ -672,6 +724,14 @@ class Cluster:
         del dev.running[name]
         del dev.assignments[name]
         self.completed.append(name)
+        if (
+            self._fc_estimator is not None
+            and cj.kind == "serve"
+            and cj.started_s is not None
+        ):
+            # learn the serve session's device-holding time — the
+            # "service time" in the autoscaler's Little's-law sizing
+            self._fc_note_session(t - cj.started_s)
         self._capacity_epoch += 1
         if dev.mode != CollocationMode.MIG and dev.running:
             # a departure lowers the contention factors for every neighbour
@@ -844,7 +904,7 @@ class Cluster:
                 if d.sku.name not in reps:
                     reps[d.sku.name] = d.scheduler
                     sku_modes[d.sku.name] = ()
-                if self.policy == "adaptive":
+                if self.policy in ("adaptive", "forecast"):
                     sku_modes[d.sku.name] = tuple(CollocationMode)
                 elif d.mode not in sku_modes[d.sku.name]:
                     sku_modes[d.sku.name] += (d.mode,)
@@ -924,7 +984,7 @@ class Cluster:
             if cj.world_size > 1:
                 placed = self._try_place_gang(cj, t)
             else:
-                for dev in self.devices.values():
+                for dev in self._placement_order(cj):
                     if self._try_place(dev, cj, t):
                         placed = True
                         break
@@ -947,6 +1007,23 @@ class Cluster:
                         floor = k
         self._blocked_floor_key = floor
 
+    def _placement_order(self, cj: ClusterJob):
+        """Device iteration order for singleton placement. The forecast
+        policy routes serve sessions decode-first — MIG (or MIG-pending)
+        devices ahead of shared ones — so sessions land on the warmed
+        slices instead of crowding the shared training devices. Every
+        other policy keeps the fleet's insertion order (the byte-compat
+        contract for existing artifacts)."""
+        if self.policy != "forecast" or cj.kind != "serve":
+            return self.devices.values()
+        return sorted(
+            self.devices.values(),
+            key=lambda d: (
+                0 if (d.pending_mode or d.mode) == CollocationMode.MIG else 1,
+                self._dev_index[d.name],
+            ),
+        )
+
     def _recompute_next_reopen(self, t: float) -> None:
         nxt = float("inf")
         for d in self.devices.values():
@@ -959,6 +1036,8 @@ class Cluster:
             return False
         if self.queue.reserved_against(cj.name, dev.name):
             return False  # held for a starved gang — backfill must not refill
+        if self.queue.prewarm_blocks(dev.name, cj.kind):
+            return False  # pre-warmed for another kind ahead of a ramp
         if dev.mode == CollocationMode.MIG:
             sched = dev.scheduler.schedule(
                 [cj.spec],
@@ -1083,6 +1162,7 @@ class Cluster:
             if dev.mode == CollocationMode.MIG
             and dev.available(t)
             and not self.queue.reserved_against(cj.name, dev.name)
+            and not self.queue.prewarm_blocks(dev.name, cj.kind)
         ]
 
     def _try_place_gang(self, cj: ClusterJob, t: float) -> bool:
@@ -1646,6 +1726,11 @@ class Cluster:
         for dev in self.devices.values():
             if not dev.available(t):
                 continue
+            if self.queue.is_prewarmed(dev.name):
+                # warmed for the predicted ramp (forecast policy): the
+                # reactive pressure loop must not flip it back for the
+                # queued training the veto is deliberately starving
+                continue
             if not self.queue:
                 # no queue pressure: the composition has not outgrown the
                 # current partitioning, so reconfiguring (and killing the
@@ -1710,8 +1795,17 @@ class Cluster:
             )
             if better:
                 self._migrate(dev, best, t)
+                if self.policy == "forecast":
+                    self._fc_reactive += 1
 
-    def _migrate(self, dev: DeviceState, new_mode: CollocationMode, t: float) -> None:
+    def _migrate(
+        self,
+        dev: DeviceState,
+        new_mode: CollocationMode,
+        t: float,
+        *,
+        kind: Optional[str] = None,
+    ) -> None:
         self._accrue_busy(dev, t)
         self._update_progress(dev, t)
         cost = self._device_reconfig_cost(dev)
@@ -1731,16 +1825,19 @@ class Cluster:
         dev.migrations += 1
         dev.reconfig_cost_s += cost
         dev.last_migration_s = t
-        self.migration_events.append(
-            {
-                "t_s": t,
-                "device": dev.name,
-                "from": dev.mode.value,
-                "to": new_mode.value,
-                "requeued": requeued,
-                "reconfig_cost_s": cost,
-            }
-        )
+        event = {
+            "t_s": t,
+            "device": dev.name,
+            "from": dev.mode.value,
+            "to": new_mode.value,
+            "requeued": requeued,
+            "reconfig_cost_s": cost,
+        }
+        if kind is not None:
+            # only forecast pre-warm flips tag a kind; the reactive path's
+            # dict stays schema-identical to pre-forecast artifacts
+            event["kind"] = kind
+        self.migration_events.append(event)
         self.events.push(t + cost, EventKind.RECONFIG_DONE, (dev.name,))
 
     # -- plan-driven re-partitions (planner policy) -----------------------------------
@@ -1911,6 +2008,248 @@ class Cluster:
         )
         self.events.push(t_eff, EventKind.RECONFIG_DONE, (dev.name,))
 
+    # -- forecast-driven autoscaling (forecast policy) --------------------------------
+    #
+    # The forecast policy is the adaptive policy's reactive machinery plus
+    # a proactive loop: a FORECAST_TICK clock (fixed ``tick_s`` grid, armed
+    # lazily on the first admitted arrival, re-armed while the cluster is
+    # live) refreshes the arrival-rate forecast (core/forecast/estimator)
+    # and re-sizes the warm set — decode-capable (MIG) devices held for the
+    # predicted serve ramp by pre-warm reservations (core/queueing.py),
+    # which veto training backfill without blocking serve sessions. Warming
+    # a device may re-partition it (``_migrate`` with kind="prewarm") or,
+    # if it is already MIG, demote its low-priority training into the
+    # trough through the checkpoint-rollback displace path; either action
+    # is gated by ``wave_amortizes`` — the same downtime + rollback
+    # economics as the planner's pays-off bar, priced against the
+    # forecast's conservative lower band instead of the realized queue.
+
+    def _fc_observe_arrival(self, cj: ClusterJob, t: float) -> None:
+        """Feed an admitted arrival into the estimator and arm the tick
+        clock. Only serve arrivals move the rate — the autoscaler sizes
+        decode capacity, so training arrivals are not its signal."""
+        if cj.kind == "serve":
+            self._fc_estimator.observe(t)
+            self._fc_serve_seen += 1
+            self._fc_serve_rep = cj.spec
+        self._ensure_forecast_tick(t)
+
+    def _fc_note_session(self, service_s: float) -> None:
+        if service_s <= 0.0:
+            return
+        alpha = self.forecast_config.session_alpha
+        if self._fc_session_s is None:
+            self._fc_session_s = service_s
+        else:
+            self._fc_session_s += alpha * (service_s - self._fc_session_s)
+
+    def _ensure_forecast_tick(self, t: float) -> None:
+        if self._fc_tick_pending:
+            return
+        nt = next_tick(t, self.forecast_config.tick_s)
+        self.events.push(nt, EventKind.FORECAST_TICK, ())
+        self._fc_tick_pending = True
+
+    def _on_forecast_tick(self, t: float) -> None:
+        self._fc_tick_pending = False
+        cfg = self.forecast_config
+        self._fc_ticks += 1
+        fc = self._fc_estimator.forecast(t, cfg.horizon_s)
+        self._fc_last = fc
+        if fc.rate_per_s > self._fc_peak_rate:
+            self._fc_peak_rate = fc.rate_per_s
+        if self._fc_autoscale(t, fc):
+            # reservations / modes changed: released devices may admit
+            # queued training now, warmed slices may admit queued sessions
+            self._dispatch(t)
+        if not self.events and self.queue:
+            # drain guard: nothing is in flight anywhere (running jobs
+            # always hold a pending lifecycle event) yet work is queued —
+            # holding warm slices now would starve it *forever*, since the
+            # predicted wave, when it actually arrives, re-arms this clock
+            # through its own arrivals and can re-warm then. Yield every
+            # reservation and let the reactive machinery take over.
+            released = False
+            for dev in self.devices.values():
+                if self.queue.prewarm_release(dev.name):
+                    released = True
+            if released:
+                self._capacity_epoch += 1
+                self._dispatch(t)
+                self._maybe_migrate(t)  # queued work may need a mode flip
+        # re-arm while the simulation is live (an empty heap here means
+        # fully drained — or wedged in a way more ticks cannot fix)
+        if self.events:
+            self._ensure_forecast_tick(t)
+
+    def _fc_candidate_order(self, t: float) -> List[DeviceState]:
+        """Warm-set candidates in preference order: devices already
+        reserved first (so the target prefix keeps them), then devices
+        already decode-partitioned, then empty devices, then busy shared
+        devices — ties broken by fleet order. Gang hosts are never
+        candidates (their slices must not move under the gang), and an
+        unreserved device that is mid-reconfiguration is not reachable."""
+        ranked = []
+        for dev in self.devices.values():
+            if any(j.world_size > 1 for j in dev.running.values()):
+                continue
+            reserved = self.queue.is_prewarmed(dev.name)
+            if not reserved and not dev.available(t):
+                continue
+            eff_mode = dev.pending_mode or dev.mode
+            if reserved:
+                rank = 0
+            elif eff_mode == CollocationMode.MIG:
+                rank = 1
+            elif not dev.running:
+                rank = 2
+            else:
+                rank = 3
+            ranked.append((rank, self._dev_index[dev.name], dev))
+        ranked.sort(key=lambda r: (r[0], r[1]))
+        return [dev for _, _, dev in ranked]
+
+    def _fc_serve_capacity(self, dev: DeviceState, rep) -> int:
+        """How many concurrent sessions like ``rep`` the device could host
+        decode-partitioned (MIG), from a trial schedule of clones on its
+        empty tree — memoized per (SKU, health, shape) like the admission
+        verdicts, since traces draw sessions from a handful of shapes."""
+        key = (
+            dev.sku.name,
+            frozenset(dev.failed_units),
+            rep.arch,
+            rep.suite.name,
+            peak_demand_multiplier(rep),
+        )
+        cached = self._fc_capacity_cache.get(key)
+        if cached is not None:
+            return cached
+        probes = [
+            dataclasses.replace(rep, name=f"__fc_probe_{i}")
+            for i in range(max(1, dev.sku.n_units))
+        ]
+        snapshot = dict(dev.scheduler._predicted)
+        trial = dev.scheduler.schedule(
+            probes,
+            blocked_units=frozenset(dev.failed_units),
+            mode=CollocationMode.MIG,
+        )
+        dev.scheduler._predicted = snapshot
+        cap = len(trial.assignments)
+        self._fc_capacity_cache[key] = cap
+        return cap
+
+    def _fc_autoscale(self, t: float, fc: RateForecast) -> bool:
+        """Re-size the warm set against the forecast; True if anything
+        changed (reservations, modes, displaced jobs)."""
+        cfg = self.forecast_config
+        rep = self._fc_serve_rep
+        session_s = self._fc_session_s
+        if rep is None or session_s is None:
+            return False  # nothing learned yet: no sessions seen/finished
+        if self._dirty:
+            # displacement decisions below read steps_done — price the
+            # open re-timing batch first (same idiom as _maybe_migrate)
+            self._flush_retimes()
+        order = self._fc_candidate_order(t)
+        if not order:
+            return False
+        caps = [float(self._fc_serve_capacity(d, rep)) for d in order]
+        reserved = sum(1 for d in order if self.queue.is_prewarmed(d.name))
+        decision = plan_autoscale(
+            fc, session_s=session_s, device_caps=caps, reserved=reserved, cfg=cfg
+        )
+        changed = False
+        if decision.release > 0:
+            drop = decision.release
+            for dev in reversed(order):  # shed from the least-preferred end
+                if drop == 0:
+                    break
+                if self.queue.prewarm_release(dev.name):
+                    self._capacity_epoch += 1  # training may place here again
+                    drop -= 1
+                    changed = True
+        if decision.prewarm > 0:
+            for dev in order[: decision.target_devices]:
+                if self.queue.is_prewarmed(dev.name):
+                    continue
+                if self._fc_prewarm_device(
+                    dev, fc, session_s, decision.target_devices, t
+                ):
+                    changed = True
+        return changed
+
+    def _fc_prewarm_device(
+        self,
+        dev: DeviceState,
+        fc: RateForecast,
+        session_s: float,
+        share: int,
+        t: float,
+    ) -> bool:
+        """Warm one device for the ramp: re-partition to MIG if needed
+        (displacing everything through checkpoint rollback), or demote its
+        low-priority training if it is already decode-capable — iff the
+        forecast's conservative wave amortizes the downtime + redo."""
+        cfg = self.forecast_config
+        if dev.running and t - dev.last_migration_s < self.migration_cooldown_s:
+            return False  # same thrash bound as the reactive path
+        needs_flip = (dev.pending_mode or dev.mode) != CollocationMode.MIG
+        if needs_flip:
+            victims = list(dev.running)
+            cost = self._device_reconfig_cost(dev)
+        else:
+            victims = [
+                name
+                for name, cj in dev.running.items()
+                if cj.kind != "serve"
+                and cj.spec.priority < cfg.demote_priority_below
+            ]
+            cost = 0.0  # MIG instance create/destroy is isolated (F3)
+        if victims:
+            # redo is computed from steps_done — bring progress up to t
+            self._accrue_busy(dev, t)
+            self._update_progress(dev, t)
+        redo_s = 0.0
+        for name in victims:
+            cj = dev.running[name]
+            cadence = cj.steps_per_epoch * CHECKPOINT_EVERY_EPOCHS
+            lost = cj.steps_done - math.floor(cj.steps_done / cadence) * cadence
+            redo_s = max(redo_s, lost * cj.step_s)
+        if not wave_amortizes(
+            fc,
+            session_s=session_s,
+            share_devices=share,
+            cost_s=cost + redo_s,
+            cfg=cfg,
+        ):
+            return False
+        if needs_flip:
+            self._migrate(dev, CollocationMode.MIG, t, kind="prewarm")
+            self._fc_prewarm_flips += 1
+        elif victims:
+            for name in victims:
+                cj = dev.running[name]
+                bumped = dataclasses.replace(
+                    cj.spec, priority=cj.spec.priority + REQUEUE_PRIORITY_BUMP
+                )
+                self._displace(dev, name, t, new_spec=bumped, count_migration=True)
+                self._fc_prewarm_preempts += 1
+            self.migration_events.append(
+                {
+                    "t_s": t,
+                    "device": dev.name,
+                    "from": dev.mode.value,
+                    "to": dev.mode.value,
+                    "kind": "prewarm_preempt",
+                    "requeued": victims,
+                    "reconfig_cost_s": 0.0,
+                }
+            )
+        self.queue.prewarm(dev.name, "serve")
+        self._capacity_epoch += 1  # the backfill veto changed placement options
+        return True
+
     # -- straggler mitigation (EMA -> live repack) -----------------------------------
 
     def observe_step(self, job_name: str, step_s: float, at_s: Optional[float] = None) -> None:
@@ -1988,6 +2327,26 @@ class Cluster:
             (j.slo_met_steps if j.kind == "serve" else j.steps_done)
             for j in self.jobs.values()
         )
+        forecast = None
+        if self.policy == "forecast":
+            cfg = self.forecast_config
+            forecast = {
+                "estimator": cfg.estimator,
+                "period_s": cfg.period_s,
+                "tick_s": cfg.tick_s,
+                "horizon_s": cfg.horizon_s,
+                "ticks": self._fc_ticks,
+                "serve_arrivals": self._fc_serve_seen,
+                "session_s": (
+                    self._fc_session_s if self._fc_session_s is not None else 0.0
+                ),
+                "peak_rate_per_s": self._fc_peak_rate,
+                "prewarm_flips": self._fc_prewarm_flips,
+                "prewarm_preempts": self._fc_prewarm_preempts,
+                "reactive_migrations": self._fc_reactive,
+                "prewarms_made": self.queue.prewarms_made,
+                "prewarms_released": self.queue.prewarms_released,
+            }
         return ClusterReport(
             policy=self.policy,
             n_devices=len(self.devices),
@@ -2027,4 +2386,5 @@ class Cluster:
             devices=[d.to_row() for d in self.devices.values()],
             migration_events=list(self.migration_events),
             failure_events=list(self.failure_events),
+            forecast=forecast,
         )

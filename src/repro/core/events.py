@@ -21,6 +21,12 @@ event heap. Everything that changes cluster state is an event:
                  the admission queue's device reservation so backfilling
                  singletons stop refilling the capacity it needs. Fired
                  only for gang jobs, so traces without gangs never see it.
+  FORECAST_TICK  the forecast policy's clock (core/forecast/): on a fixed
+                 grid of ``tick_s`` the cluster refreshes its arrival-rate
+                 forecast and autoscales the warm decode-capable device
+                 set. Scheduled lazily (ensured on arrival, re-armed while
+                 the cluster is live), and only under policy="forecast",
+                 so every other policy's event stream is untouched.
 
 Determinism contract: events at equal times are processed in push order
 (``seq`` breaks ties), so a run is a pure function of the submitted trace —
@@ -61,6 +67,7 @@ class EventKind(str, enum.Enum):
     REPAIR = "repair"
     PHASE_TRANSITION = "phase_transition"
     GANG_RESERVE = "gang_reserve"
+    FORECAST_TICK = "forecast_tick"
 
 
 @dataclasses.dataclass(frozen=True)

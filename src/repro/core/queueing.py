@@ -28,6 +28,16 @@ one gang holds reservations at a time (the oldest blocked one — that is
 what makes the protocol deadlock-free), and a reservation is released
 deterministically the moment its gang places or is rejected
 (:meth:`release`).
+
+Pre-warm reservations (:meth:`prewarm`) are the forecast policy's
+(core/forecast/) second exception, with the opposite shape: not "drain
+this device for one waiting job" but "keep this device answering *this
+kind* of job". A device warmed for serve traffic ahead of a predicted
+ramp would otherwise be backfilled away by queued training long before
+the ramp arrives; ``prewarm_blocks`` is the dispatcher's veto that stops
+that, while still admitting the kind the device was warmed for. Unlike
+gang reservations these are per-device, any number may be live at once,
+and they are held across events until the autoscaler releases them.
 """
 from __future__ import annotations
 
@@ -70,6 +80,11 @@ class AdmissionQueue:
         self._reserved_devices: FrozenSet[str] = frozenset()
         self.reservations_made = 0
         self.reservations_released = 0
+        # pre-warm reservations (forecast policy): device name -> the job
+        # kind the device is warmed for; other kinds are vetoed there
+        self._prewarmed: Dict[str, str] = {}
+        self.prewarms_made = 0
+        self.prewarms_released = 0
 
     def push(self, key: str, item: Any, *, priority: int, enqueued_s: float) -> QueueEntry:
         if key in self._entries:
@@ -146,6 +161,40 @@ class AdmissionQueue:
             and self._reserved_by != key
             and device in self._reserved_devices
         )
+
+    # -- pre-warm reservations (forecast autoscaling) ---------------------
+
+    def prewarm(self, device: str, kind: str = "serve") -> bool:
+        """Reserve ``device`` for jobs of ``kind`` ahead of a predicted
+        ramp. Idempotent per device (re-warming updates the kind without
+        recounting). Returns True if a new reservation was created."""
+        fresh = device not in self._prewarmed
+        self._prewarmed[device] = kind
+        if fresh:
+            self.prewarms_made += 1
+        return fresh
+
+    def prewarm_release(self, device: str) -> bool:
+        """Drop ``device``'s pre-warm reservation; True if it had one."""
+        if device not in self._prewarmed:
+            return False
+        del self._prewarmed[device]
+        self.prewarms_released += 1
+        return True
+
+    def prewarm_blocks(self, device: str, kind: str) -> bool:
+        """The dispatcher's backfill veto: is ``device`` warmed for a
+        different kind than ``kind``? Jobs of the warmed kind still
+        place freely — that is the point of warming."""
+        warmed_for = self._prewarmed.get(device)
+        return warmed_for is not None and warmed_for != kind
+
+    def is_prewarmed(self, device: str) -> bool:
+        return device in self._prewarmed
+
+    @property
+    def prewarmed_devices(self) -> FrozenSet[str]:
+        return frozenset(self._prewarmed)
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -42,6 +42,10 @@ differences are pure policy effects:
                      gangs' all-or-nothing reservations. Opt-in family
                      (like city_scale) — the default 30-cell grid is
                      unchanged; see docs/gang_scheduling.md.
+    diurnal_serve    serve sessions arriving at 10x the train_serve_mix
+                     rate, rate-modulated over three synthetic days, over
+                     batch training — the forecast policy's testbed
+                     (opt-in family; core/forecast/, docs/autoscaling.md).
 
   policies
     all-mig / all-mps / all-naive   homogeneous static fleets;
@@ -50,7 +54,11 @@ differences are pure policy effects:
     planner                         all-MIG hardware, placements chosen by
                                     the partition-tree optimizer
                                     (core/planner) with plan-driven
-                                    re-partitions charged like migrations.
+                                    re-partitions charged like migrations;
+    forecast                        best's hardware + reactive machinery,
+                                    plus a FORECAST_TICK loop that prices
+                                    the predicted serve wave and pre-warms
+                                    decode slices ahead of it.
 
 The characterization DB is synthesized analytically from per-arch roofline
 terms (busy seconds, replicated + sharded working-set fractions) over the
@@ -71,8 +79,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import math
-import random
 import traceback
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -81,21 +87,36 @@ from repro.configs.base import ShapeSuite
 from repro.configs.registry import CONFIGS
 from repro.core.cluster import Cluster
 from repro.core.collocation import is_sku_keyed_db
+from repro.core.forecast import ForecastConfig
 from repro.core.device import DEFAULT_SKU, SKUS, DeviceSKU, format_gib, get_sku
-from repro.core.gang.parallelism import (
-    PARALLELISMS,
-    Parallelism,
-    resolve_parallelism,
-)
-from repro.core.instance import JobSpec
-from repro.core.sharing import CollocationMode
-from repro.core.workload import Workload, serve_workload, train_workload
-from repro.telemetry.constants import HBM_PER_CHIP
+from repro.core.gang.parallelism import PARALLELISMS, resolve_parallelism
 
-# One shape suite for the whole simulation: batch 32 (the paper's §3.4
-# setting), 3200 samples/epoch -> 100 steps per epoch.
-SIM_SUITE = ShapeSuite("sim", 1024, 32, "train")
-SIM_SAMPLES_PER_EPOCH = 3200
+# The seeded trace generators live in launch/traces.py (one copy of the
+# Poisson / diurnal / burst stream machinery); the historical public names
+# are re-exported here because this module *is* the scenario registry.
+from repro.launch.traces import (  # noqa: F401  (re-exports)
+    DIURNAL_SERVE_MEAN_INTERARRIVAL_S,
+    GANG_XLARGE_PARALLELISM,
+    SERVE_SLO_S,
+    SERVE_SUITE,
+    SIM_SAMPLES_PER_EPOCH,
+    SIM_SUITE,
+    TraceItem,
+    aligned_static_trace,
+    city_burst_trace,
+    city_diurnal_trace,
+    diurnal_serve_params,
+    diurnal_serve_trace,
+    drift_trace,
+    fragmentation_trace,
+    gang_pipeline_trace,
+    hetero_sku_trace,
+    make_trace,
+    mixed_dynamic_trace,
+    train_serve_mix_trace,
+)
+from repro.core.sharing import CollocationMode
+from repro.telemetry.constants import HBM_PER_CHIP
 
 # Analytic workload catalog over registry archs. Terms are full-device
 # solo values: ``busy_s`` the dominant roofline term per step, ``repl``
@@ -145,40 +166,6 @@ HETERO_FLEET_SKUS = ("a100-40gb", "a100-80gb", "a30-24gb")
 #: gang_scheduling.md walks the memory math).
 GANG_FLEET_SKUS = ("a100-80gb", "a100-40gb")
 
-_MIX = (  # mixed_dynamic draw weights
-    ("resnet_small", 0.35),
-    ("whisper-base", 0.20),
-    ("resnet_medium", 0.20),
-    ("llama3-8b", 0.10),
-    ("resnet_large", 0.15),
-)
-
-# train_serve_mix: phase-aware training jobs (warmup/steady/checkpoint) are
-# drawn from the saturating archs — their steady compute demand is what
-# loads the MPS dispatch queue — while inference sessions (prefill/decode,
-# latency-sensitive) are drawn from the small archs whose decode working
-# set tiles MIG's 1g.5gb slices.
-_TRAIN_MIX = (
-    ("llama3-8b", 0.40),
-    ("resnet_medium", 0.30),
-    ("resnet_large", 0.15),
-    ("resnet_small", 0.15),
-)
-_SERVE_MIX = (("whisper-base", 0.55), ("granite-3-2b", 0.45))
-
-# The registry's serve shape: same shape-suite name as SIM_SUITE (the char
-# DB is keyed by suite *name*), decode kind like configs.base.DECODE_32K.
-SERVE_SUITE = ShapeSuite("sim", 1024, 32, "decode")
-
-# Per-arch p99 step-latency SLO for inference sessions: ~15% headroom over
-# the decode step on a MIG 1g.5gb slice, so an isolated slice always
-# attains it while a dispatch-queue factor F_lat >= ~1.4 under shared
-# collocation with saturating training neighbours misses it. The xlarge
-# serve arch is budgeted against its only admissible slice — the 80GB
-# generation's full profile.
-SERVE_SLO_S = {"whisper-base": 1.4e-3, "granite-3-2b": 1.35e-3,
-               "qwen2-72b": 9.0e-3}
-
 SCENARIO_HELP = {
     "aligned_static": "partition-aligned batch at t=0 — the mix MIG is built for",
     "mixed_dynamic": "Poisson arrivals over tiny/medium/large jobs (MIG rigidity)",
@@ -214,6 +201,15 @@ GANG_SCENARIO_HELP = {
                      "all-or-nothing admission, co-located beats scattered "
                      "(core/gang/, docs/gang_scheduling.md)",
 }
+# The forecast family is opt-in for the same reason as city_scale: the
+# default 30-cell grid stays the byte-pinned determinism surface, and the
+# equivalence suite sweeps this family via ALL_SCENARIOS.
+FORECAST_SCENARIO_HELP = {
+    "diurnal_serve": "diurnal serve sessions (10x the train_serve_mix "
+                     "rate, three synthetic days) over batch training — "
+                     "the forecast policy's autoscaling testbed "
+                     "(core/forecast/, docs/autoscaling.md)",
+}
 POLICY_HELP = {
     "all-mig": "homogeneous MIG fleet, greedy first-fit placement",
     "all-mps": "homogeneous MPS fleet (spatial sharing)",
@@ -221,11 +217,17 @@ POLICY_HELP = {
     "best": "best-mode-per-device with live reconfiguration (adaptive)",
     "planner": "MIG fleet placed by the partition-tree optimizer "
                "(core/planner), with plan-driven re-partitions",
+    "forecast": "adaptive fleet + forecast-driven autoscaling: estimates "
+                "the serve arrival wave (core/forecast) and pre-warms "
+                "decode slices ahead of the predicted ramp",
 }
 SCENARIOS = tuple(SCENARIO_HELP)
 CITY_SCENARIOS = tuple(CITY_SCENARIO_HELP)
 GANG_SCENARIOS = tuple(GANG_SCENARIO_HELP)
-ALL_SCENARIOS = SCENARIOS + CITY_SCENARIOS + GANG_SCENARIOS
+FORECAST_SCENARIOS = tuple(FORECAST_SCENARIO_HELP)
+ALL_SCENARIOS = (
+    SCENARIOS + CITY_SCENARIOS + GANG_SCENARIOS + FORECAST_SCENARIOS
+)
 POLICIES = tuple(POLICY_HELP)
 
 #: gang placement preferences the cluster accepts (core/cluster.py) —
@@ -308,333 +310,6 @@ def load_char_db(artifact_dir: Path) -> Dict[Tuple[str, str, str], dict]:
     return db
 
 
-# -- trace generation --------------------------------------------------------------
-
-TraceItem = Tuple[float, Union[JobSpec, Workload], int]  # (arrival_s, spec, epochs)
-
-
-def _weighted(rng: random.Random, mix) -> str:
-    x = rng.random()
-    acc = 0.0
-    for arch, w in mix:
-        acc += w
-        if x < acc:
-            return arch
-    return mix[-1][0]
-
-
-def _pick_arch(rng: random.Random) -> str:
-    return _weighted(rng, _MIX)
-
-
-def aligned_static_trace(rng: random.Random, n_jobs: int, n_devices: int) -> List[TraceItem]:
-    """Partition-aligned batch: slice-sized jobs, all submitted at t=0."""
-    n = min(n_jobs, 7 * n_devices)
-    return [
-        (0.0, JobSpec(f"al{i}", "granite-3-2b", SIM_SUITE), 3) for i in range(n)
-    ]
-
-
-def mixed_dynamic_trace(
-    rng: random.Random, n_jobs: int, *, mean_interarrival_s: float = 0.2
-) -> List[TraceItem]:
-    """Poisson arrivals over the tiny/medium/large mix."""
-    trace: List[TraceItem] = []
-    t = 0.0
-    for i in range(n_jobs):
-        t += rng.expovariate(1.0 / mean_interarrival_s)
-        arch = _pick_arch(rng)
-        prio = 2 if rng.random() < 0.10 else 0
-        epochs = rng.randint(1, 3)
-        trace.append((t, JobSpec(f"dy{i}", arch, SIM_SUITE, priority=prio), epochs))
-    return trace
-
-
-def drift_trace(rng: random.Random, n_jobs: int, n_devices: int) -> List[TraceItem]:
-    """Composition drift: a partition-aligned burst, then a tiny-job flood
-    — the queue mix the adaptive policy answers with a live mode migration."""
-    trace: List[TraceItem] = []
-    n_aligned = min(7 * n_devices, max(1, n_jobs // 2))
-    for i in range(n_aligned):
-        trace.append(
-            (0.01 * i, JobSpec(f"ph1-{i}", "granite-3-2b", SIM_SUITE), 2)
-        )
-    t = 4.0
-    for i in range(max(0, n_jobs - n_aligned)):
-        t += rng.expovariate(1.0 / 0.005)  # near-burst: > 7 per device in flight
-        arch = "resnet_small" if rng.random() < 0.7 else "whisper-base"
-        trace.append((t, JobSpec(f"ph2-{i}", arch, SIM_SUITE), rng.randint(1, 2)))
-    return trace
-
-
-def train_serve_mix_trace(
-    rng: random.Random, n_jobs: int, *, mean_interarrival_s: float = 0.05
-) -> List[TraceItem]:
-    """Training jobs and inference sessions interleaved on one Poisson
-    stream — the mixed fleet MIGPerf measures. ~40% of arrivals are
-    phase-aware training jobs over the saturating archs; the rest are
-    latency-SLO inference sessions (priority 1: latency-sensitive work is
-    dispatched ahead of batch training) whose 100-step session is a
-    prefill burst plus an elastic decode tail."""
-    trace: List[TraceItem] = []
-    t = 0.0
-    for i in range(n_jobs):
-        t += rng.expovariate(1.0 / mean_interarrival_s)
-        if rng.random() < 0.4:
-            arch = _weighted(rng, _TRAIN_MIX)
-            wl = train_workload(
-                f"tr{i}", arch, SIM_SUITE, warmup_steps=5, checkpoint_steps=3
-            )
-            trace.append((t, wl, rng.randint(1, 2)))
-        else:
-            arch = _weighted(rng, _SERVE_MIX)
-            wl = serve_workload(
-                f"sv{i}",
-                arch,
-                SERVE_SUITE,
-                slo_step_s=SERVE_SLO_S[arch],
-                prefill_steps=4,
-                priority=1,
-            )
-            trace.append((t, wl, 1))
-    return trace
-
-
-def fragmentation_trace(
-    rng: random.Random, n_jobs: int, n_devices: int
-) -> List[TraceItem]:
-    """The planner's showcase: a stream of slice-sized 1g jobs followed by
-    2g-class jobs (stablelm-12b: OOMs on 1g.5gb, fits 2g.10gb). Greedy
-    first-fit packs the 1g jobs at the lowest start offsets, which blocks
-    all three of 2g's legal starts (units 0, 2, 4) while free units remain
-    — the 2g jobs strand until the 1g cohort drains. The planner's
-    flexibility tie-break parks the same 1g jobs on offsets that keep a 2g
-    start open, so the 2g jobs place on arrival."""
-    trace: List[TraceItem] = []
-    n_small = min(5 * n_devices, max(1, (n_jobs * 2) // 3))
-    for i in range(n_small):
-        trace.append(
-            (0.005 * i, JobSpec(f"fr-s{i}", "granite-3-2b", SIM_SUITE), 3)
-        )
-    t = 0.08
-    for i in range(max(0, n_jobs - n_small)):
-        t += rng.expovariate(1.0 / 0.03)
-        trace.append((t, JobSpec(f"fr-b{i}", "stablelm-12b", SIM_SUITE), 1))
-    return trace
-
-
-def hetero_sku_trace(
-    rng: random.Random, n_jobs: int, *, mean_interarrival_s: float = 0.05
-) -> List[TraceItem]:
-    """The mixed-generation fleet's mix on one Poisson stream: ~25%
-    big-memory inference sessions (xlarge: the 80GB generation's full
-    slice is the only instance in the whole fleet that admits their
-    working set), plus slice-aligned 1g jobs (fit every tree), 2g-class
-    jobs (fit the 40/80GB 2g slices and the A30's 2g.12gb), and tiny
-    filler. The queue, not the operator, routes each job to whichever
-    generation's placement tree fits it."""
-    trace: List[TraceItem] = []
-    t = 0.0
-    for i in range(n_jobs):
-        t += rng.expovariate(1.0 / mean_interarrival_s)
-        x = rng.random()
-        if x < 0.25:
-            wl = serve_workload(
-                f"hx{i}",
-                "qwen2-72b",
-                SERVE_SUITE,
-                slo_step_s=SERVE_SLO_S["qwen2-72b"],
-                prefill_steps=4,
-                priority=1,
-            )
-            trace.append((t, wl, 1))
-        elif x < 0.55:
-            trace.append(
-                (t, JobSpec(f"ha{i}", "granite-3-2b", SIM_SUITE), rng.randint(1, 2))
-            )
-        elif x < 0.80:
-            trace.append((t, JobSpec(f"ht{i}", "stablelm-12b", SIM_SUITE), 1))
-        else:
-            trace.append(
-                (t, JobSpec(f"hs{i}", "resnet_small", SIM_SUITE), rng.randint(1, 2))
-            )
-    return trace
-
-
-#: The gang_pipeline headline class: a qwen2-72b-class trainer whose
-#: working set fits *no* single slice in the fleet (xlarge as a train
-#: job), sharded tensor=2 x pipeline=2 into four members that each fit an
-#: 80GB-generation 3g/4g slice — two members per a100-80gb, so the gang
-#: spans both 80GB devices all-or-nothing.
-GANG_XLARGE_PARALLELISM = Parallelism(tensor=2, pipeline=2)
-
-
-def _gang_train(name: str, arch: str, par: Parallelism) -> Workload:
-    """A phase-aware training gang: ``train_workload``'s warmup/steady/
-    checkpoint plan with the gang descriptor stamped on (the registry
-    helpers build singletons; gangs are the same plan, wider)."""
-    return dataclasses.replace(
-        train_workload(name, arch, SIM_SUITE, warmup_steps=5, checkpoint_steps=3),
-        world_size=par.world_size,
-        parallelism=par,
-    )
-
-
-def gang_pipeline_trace(
-    rng: random.Random,
-    n_jobs: int,
-    *,
-    mean_interarrival_s: float = 0.05,
-    parallelism: str = "tp2",
-) -> List[TraceItem]:
-    """Multi-slice gangs with singleton filler on one Poisson stream:
-    ~12% qwen2-72b world_size-4 tensor+pipeline gangs (fit *only* as a
-    gang — full-slice-only placement rejects them outright), ~28%
-    2g-class gangs under the ``parallelism`` descriptor (fit everywhere,
-    so the co-located-vs-scattered comparison is theirs to decide), and
-    ~60% slice-aligned / tiny singletons that backfill around the gangs'
-    reservations — the head-of-line pressure the starvation bound caps."""
-    par = resolve_parallelism(parallelism)
-    trace: List[TraceItem] = []
-    t = 0.0
-    for i in range(n_jobs):
-        t += rng.expovariate(1.0 / mean_interarrival_s)
-        x = rng.random()
-        if x < 0.12:
-            trace.append(
-                (t, _gang_train(f"gq{i}", "qwen2-72b", GANG_XLARGE_PARALLELISM), 1)
-            )
-        elif x < 0.40:
-            trace.append(
-                (t, _gang_train(f"gs{i}", "stablelm-12b", par), rng.randint(1, 2))
-            )
-        elif x < 0.75:
-            trace.append(
-                (t, JobSpec(f"ga{i}", "granite-3-2b", SIM_SUITE), rng.randint(1, 2))
-            )
-        else:
-            trace.append((t, JobSpec(f"gt{i}", "resnet_small", SIM_SUITE), 1))
-    return trace
-
-
-# The city_scale family: the trace shapes the scoreboard runs at 10^5-10^6
-# arrivals over hundreds of devices (benchmarks/sim_perf.py). Sessions are
-# drawn from archs every fleet mode admits on every registered SKU, so the
-# same generators double as ordinary (small) scenario cells in the default
-# grid: serve sessions over the tiny/aligned archs, training jobs over the
-# small end of the training mix.
-_CITY_SERVE_MIX = (("whisper-base", 0.60), ("granite-3-2b", 0.40))
-_CITY_TRAIN_MIX = (
-    ("resnet_small", 0.45),
-    ("llama3-8b", 0.30),
-    ("resnet_medium", 0.25),
-)
-
-
-def _city_session(rng: random.Random, t: float, i: int, serve_frac: float) -> TraceItem:
-    """One city arrival: a latency-SLO inference session (probability
-    ``serve_frac`` — city streams are serve-heavy) or a phase-aware
-    training job."""
-    if rng.random() < serve_frac:
-        arch = _weighted(rng, _CITY_SERVE_MIX)
-        wl = serve_workload(
-            f"ct{i}",
-            arch,
-            SERVE_SUITE,
-            slo_step_s=SERVE_SLO_S[arch],
-            prefill_steps=4,
-            priority=1,
-        )
-        return (t, wl, 1)
-    arch = _weighted(rng, _CITY_TRAIN_MIX)
-    wl = train_workload(f"ct{i}", arch, SIM_SUITE, warmup_steps=5, checkpoint_steps=3)
-    return (t, wl, 1)
-
-
-def city_diurnal_trace(
-    rng: random.Random,
-    n_jobs: int,
-    *,
-    mean_interarrival_s: float = 0.02,
-    serve_frac: float = 0.70,
-) -> List[TraceItem]:
-    """Diurnal city load: a non-homogeneous Poisson stream whose rate
-    follows a sinusoidal day cycle (0.35x in the trough to 1.65x at the
-    peak), one synthetic day per trace regardless of ``n_jobs`` — so a
-    10^5-arrival scoreboard run and a 60-job test cell sweep the same
-    load shape. Each exponential gap is scaled by the instantaneous rate
-    (equivalent to thinning, without discarding draws)."""
-    trace: List[TraceItem] = []
-    t = 0.0
-    day_s = max(n_jobs, 1) * mean_interarrival_s
-    for i in range(n_jobs):
-        rate_x = 1.0 + 0.65 * math.sin((t / day_s) * 2.0 * math.pi)
-        t += rng.expovariate(rate_x / mean_interarrival_s)
-        trace.append(_city_session(rng, t, i, serve_frac))
-    return trace
-
-
-def city_burst_trace(
-    rng: random.Random,
-    n_jobs: int,
-    *,
-    calm_interarrival_s: float = 0.05,
-    burst_interarrival_s: float = 0.004,
-    max_burst: int = 12,
-    serve_frac: float = 0.70,
-) -> List[TraceItem]:
-    """Bursty city load: a Markov-modulated Poisson stream — calm
-    stretches punctuated by short bursts at ~12x the calm rate (session
-    storms). The burst windows are what drive ``peak_depth`` on the
-    admission queue, the scoreboard's burst-pressure column."""
-    trace: List[TraceItem] = []
-    t = 0.0
-    burst_left = 0
-    for i in range(n_jobs):
-        if burst_left == 0 and rng.random() < 0.08:
-            burst_left = rng.randint(5, max_burst)
-        if burst_left > 0:
-            burst_left -= 1
-            t += rng.expovariate(1.0 / burst_interarrival_s)
-        else:
-            t += rng.expovariate(1.0 / calm_interarrival_s)
-        trace.append(_city_session(rng, t, i, serve_frac))
-    return trace
-
-
-def make_trace(
-    scenario: str,
-    seed: int,
-    n_jobs: int,
-    n_devices: int,
-    *,
-    gang_parallelism: str = "tp2",
-) -> List[TraceItem]:
-    # fresh, scenario-salted RNG: identical trace for every policy
-    rng = random.Random(f"{seed}:{scenario}")
-    if scenario == "aligned_static":
-        return aligned_static_trace(rng, n_jobs, n_devices)
-    if scenario == "mixed_dynamic":
-        return mixed_dynamic_trace(rng, n_jobs)
-    if scenario == "drift":
-        return drift_trace(rng, n_jobs, n_devices)
-    if scenario == "train_serve_mix":
-        return train_serve_mix_trace(rng, n_jobs)
-    if scenario == "fragmentation":
-        return fragmentation_trace(rng, n_jobs, n_devices)
-    if scenario == "hetero_sku":
-        return hetero_sku_trace(rng, n_jobs)
-    if scenario == "gang_pipeline":
-        return gang_pipeline_trace(rng, n_jobs, parallelism=gang_parallelism)
-    if scenario == "city_diurnal":
-        return city_diurnal_trace(rng, n_jobs)
-    if scenario == "city_burst":
-        return city_burst_trace(rng, n_jobs)
-    raise ValueError(
-        f"unknown scenario {scenario!r}; choose from: {', '.join(ALL_SCENARIOS)}"
-    )
-
-
 def make_fleet(
     policy: str, n_devices: int, skus: Sequence[str] = ("a100-40gb",)
 ) -> Tuple[List[Tuple[str, CollocationMode, str]], str]:
@@ -661,12 +336,39 @@ def make_fleet(
         # same hardware as all-mig; only the placement decisions differ —
         # the printed deltas against all-mig are pure planner effects
         return fleet(CollocationMode.MIG), "planner"
+    if policy == "forecast":
+        # same starting hardware as best (the trough favours shared
+        # training); the printed deltas against best are pure effects of
+        # the proactive pre-warm loop (core/forecast/)
+        return fleet(CollocationMode.MPS), "forecast"
     raise ValueError(
         f"unknown fleet policy {policy!r}; choose from: {', '.join(POLICIES)}"
     )
 
 
 # -- cell execution ----------------------------------------------------------------
+
+
+def forecast_config_for(scenario: str, n_jobs: int) -> ForecastConfig:
+    """Scenario-matched forecast knobs for ``policy="forecast"`` cells.
+
+    The diurnal_serve family pins the seasonal estimator's period to the
+    trace's synthetic day (launch/traces.py derives day length from the
+    job count), with the tick and horizon scaled to fractions of it —
+    ~40 forecasts per day, pricing an eighth of a day ahead. Every other
+    scenario runs the library defaults: with no seasonal structure to
+    learn the estimator stays in cold start (zero lower band), the
+    amortization gate never fires, and the policy degrades gracefully to
+    its reactive-adaptive core."""
+    if scenario in FORECAST_SCENARIOS:
+        day_s = diurnal_serve_params(n_jobs)["day_s"]
+        return ForecastConfig(
+            period_s=day_s,
+            n_bins=16,
+            tick_s=day_s / 40.0,
+            horizon_s=day_s / 8.0,
+        )
+    return ForecastConfig()
 
 
 def run_cell(
@@ -733,6 +435,11 @@ def run_cell(
         retime=retime,
         gang_placement=gang_placement,
         gang_reserve_after_s=gang_reserve_after_s,
+        forecast=(
+            forecast_config_for(scenario, n_jobs)
+            if cluster_policy == "forecast"
+            else None
+        ),
     )
     trace = make_trace(
         scenario, seed, n_jobs, n_devices, gang_parallelism=gang_parallelism
@@ -901,6 +608,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"  {name:<16} {desc}")
         print("gang scenarios (multi-slice family, opt-in via --scenarios):")
         for name, desc in GANG_SCENARIO_HELP.items():
+            print(f"  {name:<16} {desc}")
+        print("forecast scenarios (autoscaling family, opt-in via --scenarios):")
+        for name, desc in FORECAST_SCENARIO_HELP.items():
             print(f"  {name:<16} {desc}")
         print("gang parameters:")
         print(f"  placements       {', '.join(GANG_PLACEMENTS)} (--gang-placement)")

@@ -352,6 +352,66 @@ def test_gang_pipeline_drains_on_every_policy():
         assert s["completed"] + s["rejected"] == s["n_jobs"], (policy, s)
 
 
+# -- cluster integration: phase transitions ----------------------------------------
+
+
+def test_gang_phase_transition_reprices_every_member():
+    """A gang member crossing its warmup boundary re-prices ALL members at
+    the new demand and re-derives the comm-priced gang step — placements
+    stay put (F3 per member slice), only the pricing moves."""
+    from repro.core.workload import member_demand
+
+    c = Cluster(_DBS, fleet(2))
+    cj = c.submit(gang_train("g", "qwen2-72b", TP2PP2), 0.0, epochs=1,
+                  samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+    c.run_until(0.0)  # placed
+    warm_step = cj.step_s
+    placements = {
+        r: c.devices[d].assignments[member_name("g", r)].placement
+        for r, d in enumerate(cj.member_devices)
+    }
+    while cj.phase_transitions == 0 and c.events:
+        c.tick()
+    assert cj.phase_transitions == 1  # warmup -> steady
+    mdemand = member_demand(cj.spec, cj.active_demand())
+    member_steps = []
+    for rank, dname in enumerate(cj.member_devices):
+        d = c.devices[dname]
+        a = d.assignments[member_name("g", rank)]
+        assert a.placement == placements[rank]  # no member moved
+        assert a.predicted_step_s == pytest.approx(
+            d.scheduler.predict_step(a.job, a.profile, mdemand)
+        )
+        member_steps.append(a.predicted_step_s)
+    # the gang step is the slowest member plus non-negative comm overhead,
+    # and the steady re-price actually changed the warmup-era step
+    assert cj.step_s >= max(member_steps)
+    assert cj.step_s != warm_step
+    rep = c.run()
+    assert rep.completed == 1
+    assert rep.jobs[0]["phase_transitions"] >= 2  # ... -> checkpoint too
+
+
+def test_gang_phase_transitions_identical_on_both_retime_engines():
+    """PHASE_TRANSITION x gangs across the engine seam: phase-aware gangs
+    (wide and narrow) plus singleton filler must re-time to identical
+    reports under retime="full" and retime="incremental" — and the trace
+    must actually cross phase boundaries for the comparison to bite."""
+    reports = []
+    for retime in ("full", "incremental"):
+        c = Cluster(_DBS, fleet(4), retime=retime, gang_reserve_after_s=0.5)
+        c.submit(gang_train("g4", "qwen2-72b", TP2PP2), 0.0, epochs=1,
+                 samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+        c.submit(gang_train("g2", "stablelm-12b", TP2), 0.01, epochs=2,
+                 samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+        c.submit(JobSpec("solo", "granite-3-2b", SIM_SUITE), 0.02, epochs=1,
+                 samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+        reports.append(c.run().to_dict())
+    assert reports[0] == reports[1]
+    gang_rows = [j for j in reports[0]["jobs"] if j.get("world_size", 1) > 1]
+    assert gang_rows and all(j["phase_transitions"] >= 2 for j in gang_rows)
+
+
 # -- CLI surfacing -----------------------------------------------------------------
 
 

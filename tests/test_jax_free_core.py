@@ -33,9 +33,13 @@ import repro.core.planner
 import repro.core.planner.enumerator
 import repro.core.planner.costmodel
 import repro.core.planner.optimizer
+import repro.core.forecast
+import repro.core.forecast.estimator
+import repro.core.forecast.policy
 
 from repro.core.workload import serve_workload, train_workload  # noqa: F401
 from repro.core.planner import enumerate_configs, plan_placements  # noqa: F401
+from repro.core.forecast import make_estimator, plan_autoscale  # noqa: F401
 
 assert len(enumerate_configs()) == 296  # the partition tree, jax-free
 
@@ -51,6 +55,12 @@ assert cell["report"]["completed"] + cell["report"]["rejected"] == cell["n_jobs"
 cell = run_cell("fragmentation", "planner", n_jobs=10, n_devices=2)
 assert cell["status"] == "OK", cell
 assert cell["report"]["still_queued"] == 0, cell
+
+# forecast-driven autoscaling: the estimator/policy math and the
+# FORECAST_TICK clock are pure stdlib too
+cell = run_cell("diurnal_serve", "forecast", n_jobs=6, n_devices=2)
+assert cell["status"] == "OK", cell
+assert cell["report"]["forecast"]["ticks"] > 0, cell
 print("jax-free-ok")
 """
 

@@ -56,13 +56,25 @@ def _stream_multisets(stream):
     return {t: sorted(evs) for t, evs in groups.items()}
 
 
+# diurnal_serve multiplies each --steps unit into 20 session arrivals at a
+# fixed 10x interarrival rate (launch/traces.py), so the default n=60 cell
+# is a 1200-arrival trace and the all-naive fleet stacks dozens of
+# co-resident jobs per device (quadratic re-timing). Sweep the engines at a
+# size that still spans all three synthetic days but keeps the suite's
+# runtime bounded (CI byte-pins the full-size cell in its forecast job).
+_CELL_N_JOBS = {"diurnal_serve": 6}
+
+
 @pytest.mark.parametrize("scenario,policy", _CELLS)
 def test_artifact_cell_bytes_identical(scenario, policy):
     """The acceptance criterion: every seed-0 default-grid cell reproduces
     byte-for-byte on the incremental path (the cell dict embeds the whole
     report, so metrics equality is implied by bytes equality)."""
-    full = run_cell(scenario, policy, seed=0, char_db=_DB, retime="full")
-    inc = run_cell(scenario, policy, seed=0, char_db=_DB, retime="incremental")
+    n = _CELL_N_JOBS.get(scenario, 60)
+    full = run_cell(scenario, policy, seed=0, n_jobs=n, char_db=_DB,
+                    retime="full")
+    inc = run_cell(scenario, policy, seed=0, n_jobs=n, char_db=_DB,
+                   retime="incremental")
     assert _artifact_bytes(inc) == _artifact_bytes(full)
 
 
@@ -98,11 +110,55 @@ def _drive(scenario, policy, retime, *, seed=0, n_jobs=40, n_devices=2):
 
 @pytest.mark.parametrize("scenario,policy", _CELLS)
 def test_live_event_streams_identical(scenario, policy):
-    stream_full, report_full = _drive(scenario, policy, "full")
-    stream_inc, report_inc = _drive(scenario, policy, "incremental")
+    n = _CELL_N_JOBS.get(scenario, 40)
+    stream_full, report_full = _drive(scenario, policy, "full", n_jobs=n)
+    stream_inc, report_inc = _drive(scenario, policy, "incremental", n_jobs=n)
     assert report_inc == report_full
     assert len(stream_inc) == len(stream_full)
     assert _stream_multisets(stream_inc) == _stream_multisets(stream_full)
+
+
+def test_gang_phase_transition_streams_identical():
+    """PHASE_TRANSITION x gangs: a phase-aware gang's boundary crossings
+    re-time siblings through _reprice_gang on the incremental path and the
+    reference path — the live streams must agree at every instant, and the
+    trace must actually contain gang phase transitions to compare."""
+    import dataclasses
+
+    from repro.core.gang.parallelism import Parallelism
+
+    def gang(name, arch, world, **kw):
+        return dataclasses.replace(
+            train_workload(name, arch, SIM_SUITE, **kw),
+            world_size=world,
+            parallelism=Parallelism(tensor=world),
+        )
+
+    results = []
+    for retime in ("full", "incremental"):
+        cluster = Cluster(
+            _DB,
+            [(f"d{i}", "mig", "a100-80gb") for i in range(2)],
+            reconfig_cost_s=0.5,
+            migration_cooldown_s=1.0,
+            retime=retime,
+            gang_reserve_after_s=0.5,
+        )
+        cluster.event_log = []
+        cluster.submit(gang("g", "stablelm-12b", 2, warmup_steps=3,
+                            checkpoint_steps=2), 0.0, epochs=2,
+                       samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+        cluster.submit(JobSpec("solo", "granite-3-2b", SIM_SUITE), 0.005,
+                       epochs=1, samples_per_epoch=SIM_SAMPLES_PER_EPOCH)
+        report = cluster.run()
+        results.append((cluster.event_log, _rounded(report.to_dict())))
+    (stream_full, report_full), (stream_inc, report_inc) = results
+    assert report_inc == report_full
+    assert _stream_multisets(stream_inc) == _stream_multisets(stream_full)
+    gang_phase_evs = [
+        e for e in stream_full if e[1] == "phase_transition" and e[2][1] == "g"
+    ]
+    assert gang_phase_evs  # the comparison actually exercised the seam
 
 
 def test_retime_arg_is_validated():

@@ -57,6 +57,39 @@ def test_list_prints_every_scenario_and_fleet_and_exits_zero(capsys):
     assert set(simulate.POLICY_HELP) == set(simulate.POLICIES)
 
 
+def test_list_surfaces_forecast_family(capsys):
+    """The autoscaling family is opt-in (not in the default grid) but must
+    still be discoverable: --list prints the scenario under its own family
+    header and the forecast fleet policy in the main registry."""
+    assert simulate.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "forecast scenarios" in out and "diurnal_serve" in out
+    assert "forecast-driven autoscaling" in out
+    assert "forecast" in simulate.POLICIES
+    assert "diurnal_serve" not in simulate.SCENARIOS  # opt-in, not default
+    assert set(simulate.FORECAST_SCENARIOS) == set(simulate.FORECAST_SCENARIO_HELP)
+
+
+def test_opt_in_diurnal_serve_forecast_cell_runs_via_cli(tmp_path, capsys):
+    """--scenarios diurnal_serve --policies forecast is a runnable cell
+    end to end through main(), and its artifact carries the forecast
+    report block."""
+    import json
+
+    rc = simulate.main([
+        "--steps", "6", "--seed", "0",
+        "--scenarios", "diurnal_serve", "--policies", "forecast",
+        "--out", str(tmp_path / "out"),
+    ])
+    assert rc == 0
+    assert "[FAIL]" not in capsys.readouterr().out
+    cell = json.loads(
+        (tmp_path / "out" / "diurnal_serve__forecast.json").read_text()
+    )
+    assert cell["status"] == "OK"
+    assert cell["report"]["forecast"]["ticks"] > 0
+
+
 def test_db_flag_skips_hetero_sku_instead_of_failing(tmp_path, capsys):
     """A flat measured DB (--db) cannot price the mixed-generation fleet;
     the hetero_sku scenario must be a documented skip, not a failed cell
