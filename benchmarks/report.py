@@ -8,6 +8,7 @@
     PYTHONPATH=src python -m benchmarks.report devices    # cross-SKU verdicts
     PYTHONPATH=src python -m benchmarks.report gang       # gang placement goodput
     PYTHONPATH=src python -m benchmarks.report autoscale  # forecast vs reactive
+    PYTHONPATH=src python -m benchmarks.report trace      # scheduler trace health
 
 All sections render through the shared table renderer
 (benchmarks/common.py:format_table, markdown style).
@@ -466,9 +467,194 @@ def fmt_autoscale() -> str:
     return f"{head}\n\n{format_table(_AUTOSCALE_COLUMNS, rows, style='markdown')}"
 
 
+def _percentile(values, q: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation)."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    k = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+    return float(xs[k])
+
+
+_TRACE_QUEUE_COLUMNS = (
+    Column("metric"),
+    Column("n"),
+    Column("p50", fmt="{:.4f}"),
+    Column("p99", fmt="{:.4f}"),
+    Column("mean", fmt="{:.4f}"),
+)
+
+_TRACE_BUSY_COLUMNS = (
+    Column("device"),
+    Column("busy_frac", "busy fraction", fmt="{:.4f}"),
+    Column("occ_spans", "occupancy spans"),
+    Column("decisions", "decision instants"),
+)
+
+_TRACE_STEP_COLUMNS = (
+    Column("arch"),
+    Column("profile", "slice/profile"),
+    Column("n", "samples"),
+    Column("measured_s", "mean measured_s", fmt="{:.5f}"),
+    Column("predicted_s", "mean predicted_s", fmt="{:.5f}"),
+    Column("rel_err", "mean |rel err|", fmt="{:.4f}"),
+)
+
+_TRACE_FC_COLUMNS = (
+    Column("day"),
+    Column("ticks"),
+    Column("abs_err", "mean |err|/s", fmt="{:.3f}"),
+    Column("p99_err", "p99 |err|/s", fmt="{:.3f}"),
+    Column("in_band", "in-band frac", fmt="{:.3f}"),
+)
+
+
+def fmt_trace() -> str:
+    """Trace-derived scheduler health report (docs/observability.md).
+
+    Runs two traced seed-0 cells in-process and summarizes the recorded
+    stream — the same numbers a Perfetto load of the exported
+    ``_trace__*.json`` shows visually:
+
+    - train_serve_mix x all-mig: queue-depth percentiles from the
+      ``queue_depth`` counter series, time-to-first-dispatch from the
+      ``dispatch`` decision instants (``first`` pairs only), per-device
+      busy fraction as the time-weighted mean of each ``util:<dev>``
+      counter, and the measured-vs-predicted step-time table aggregated
+      from ``Cluster.observe_step`` + completion samples per
+      (arch, slice) — the char-DB calibration data source.
+    - diurnal_serve x forecast: per-tick forecast absolute error and
+      in-band fraction from the ``forecast_tick`` instants, binned by
+      synthetic day (period_s = 1.0).
+    """
+    from repro.core.obs import TraceRecorder
+    from repro.launch.simulate import run_cell
+
+    rec = TraceRecorder()
+    cell = run_cell("train_serve_mix", "all-mig", seed=0, trace=rec)
+    makespan = cell["report"]["makespan_s"]
+
+    depth = [v for _, v in rec.counters.get("queue_depth", [])]
+    waits = [
+        i[4]["wait_s"]
+        for i in rec.instants_named("dispatch")
+        if i[4].get("first")
+    ]
+    qrows = [
+        {"metric": "queue_depth", "n": len(depth),
+         "p50": _percentile(depth, 0.50), "p99": _percentile(depth, 0.99),
+         "mean": sum(depth) / len(depth) if depth else 0.0},
+        {"metric": "first_dispatch_wait_s", "n": len(waits),
+         "p50": _percentile(waits, 0.50), "p99": _percentile(waits, 0.99),
+         "mean": sum(waits) / len(waits) if waits else 0.0},
+    ]
+
+    def time_weighted_mean(series, horizon):
+        # counters are piecewise-constant between event-boundary samples;
+        # the series starts at 0 utilization and the last value holds to
+        # the end of the run
+        if not series or horizon <= 0.0:
+            return 0.0
+        area, prev_t, prev_v = 0.0, 0.0, 0.0
+        for t, v in series:
+            area += prev_v * (min(t, horizon) - prev_t)
+            prev_t, prev_v = min(t, horizon), v
+        area += prev_v * (horizon - prev_t)
+        return area / horizon
+
+    brows = []
+    for track in rec.tracks:
+        if not track.startswith("dev:"):
+            continue
+        name = track[len("dev:"):]
+        brows.append(
+            {
+                "device": name,
+                "busy_frac": time_weighted_mean(
+                    rec.counters.get(f"util:{name}", []), makespan),
+                "occ_spans": sum(
+                    1 for s in rec.spans
+                    if s[0] == track and s[2] == "occupancy"),
+                "decisions": sum(
+                    1 for i in rec.instants
+                    if (i[4] or {}).get("device") == name),
+            }
+        )
+
+    by_key = {}
+    for s in rec.samples:
+        by_key.setdefault((s["arch"], s["profile"]), []).append(s)
+    srows = []
+    for (arch, profile), group in sorted(by_key.items()):
+        n = len(group)
+        srows.append(
+            {
+                "arch": arch,
+                "profile": profile,
+                "n": n,
+                "measured_s": sum(s["measured_s"] for s in group) / n,
+                "predicted_s": sum(s["predicted_s"] for s in group) / n,
+                "rel_err": sum(
+                    abs(s["measured_s"] - s["predicted_s"])
+                    / s["predicted_s"]
+                    for s in group if s["predicted_s"] > 0.0
+                ) / n,
+            }
+        )
+
+    fc_rec = TraceRecorder()
+    run_cell("diurnal_serve", "forecast", seed=0, trace=fc_rec)
+    ticks = fc_rec.instants_named("forecast_tick")
+    by_day = {}
+    for i in ticks:
+        by_day.setdefault(int(i[3] // 1.0), []).append(i[4])
+    frows = []
+    for day, group in sorted(by_day.items()):
+        errs = [a["abs_err_per_s"] for a in group]
+        frows.append(
+            {
+                "day": str(day),
+                "ticks": len(group),
+                "abs_err": sum(errs) / len(errs),
+                "p99_err": _percentile(errs, 0.99),
+                "in_band": sum(1 for a in group if a["in_band"]) / len(group),
+            }
+        )
+    if ticks:
+        all_args = [i[4] for i in ticks]
+        errs = [a["abs_err_per_s"] for a in all_args]
+        frows.append(
+            {
+                "day": "all",
+                "ticks": len(all_args),
+                "abs_err": sum(errs) / len(errs),
+                "p99_err": _percentile(errs, 0.99),
+                "in_band": sum(1 for a in all_args if a["in_band"])
+                / len(all_args),
+            }
+        )
+
+    sections = [
+        "trace summary: seed-0 train_serve_mix x all-mig "
+        f"({len(rec.spans)} spans, {len(rec.instants)} decision instants, "
+        f"{len(rec.samples)} step samples; docs/observability.md)",
+        "queue health (queue_depth counter / first-dispatch instants):",
+        format_table(_TRACE_QUEUE_COLUMNS, qrows, style="markdown"),
+        "per-device busy fraction (time-weighted util:<dev> counter):",
+        format_table(_TRACE_BUSY_COLUMNS, brows, style="markdown"),
+        "measured vs predicted step time per (arch, slice) — the char-DB "
+        "calibration table (observe_step + completion samples):",
+        format_table(_TRACE_STEP_COLUMNS, srows, style="markdown"),
+        "forecast accuracy: seed-0 diurnal_serve x forecast, per synthetic "
+        "day (forecast_tick instants, predicted band vs realized rate):",
+        format_table(_TRACE_FC_COLUMNS, frows, style="markdown"),
+    ]
+    return "\n\n".join(sections)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
     print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate,
            "modes": fmt_modes, "placement": fmt_placement,
            "devices": fmt_devices, "gang": fmt_gang,
-           "autoscale": fmt_autoscale}[which]())
+           "autoscale": fmt_autoscale, "trace": fmt_trace}[which]())

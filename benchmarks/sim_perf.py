@@ -138,6 +138,8 @@ def run_perf_cell(
             "dispatch_full_scans": cluster.perf["dispatch_full_scans"],
             "dispatch_fast_scans": cluster.perf["dispatch_fast_scans"],
             "heap_compactions": cluster.events.compactions,
+            "event_tombstones": cluster.events.tombstones,
+            "peak_heap_len": cluster.events.peak_heap_len,
             "makespan_s": round(report.makespan_s, 9),
             "report_sha256": fingerprint,
         },

@@ -116,6 +116,7 @@ from repro.core.events import Event, EventKind, EventQueue
 from repro.core.forecast import (
     ForecastConfig,
     RateForecast,
+    forecast_provenance,
     next_tick,
     plan_autoscale,
     wave_amortizes,
@@ -128,6 +129,7 @@ from repro.core.gang.parallelism import (
 )
 from repro.core.gang.placement import GangPlan, plan_gang
 from repro.core.instance import JobSpec
+from repro.core.obs import TraceRecorder
 from repro.core.profiles import Placement
 from repro.core.queueing import AdmissionQueue, QueueEntry
 from repro.core.sharing import (
@@ -410,6 +412,7 @@ class Cluster:
         gang_placement: str = "colocate",
         gang_link: Optional[LinkModel] = None,
         forecast: Optional[ForecastConfig] = None,
+        trace: Optional[TraceRecorder] = None,
     ):
         """``devices`` entries are ``(name, mode)`` — the default SKU — or
         ``(name, mode, sku)`` for a heterogeneous-generation fleet
@@ -438,7 +441,14 @@ class Cluster:
         (core/forecast/) and requires ``policy="forecast"`` — that policy
         keeps the adaptive policy's reactive machinery and adds a
         FORECAST_TICK clock that pre-warms decode-capable devices ahead
-        of the predicted serve ramp (docs/autoscaling.md)."""
+        of the predicted serve ramp (docs/autoscaling.md).
+
+        ``trace`` attaches a ``TraceRecorder`` (core/obs/): every
+        scheduler decision, job lifecycle span, occupancy interval, and
+        event-boundary counter sample is recorded against sim time
+        (docs/observability.md). Tracing is purely observational — a
+        traced run's report and artifacts are byte-identical to an
+        untraced one."""
         if policy not in ("static", "adaptive", "planner", "forecast"):
             raise ValueError(f"unknown policy {policy!r}")
         if forecast is not None and policy != "forecast":
@@ -556,6 +566,22 @@ class Cluster:
             "dispatch_full_scans": 0,
             "dispatch_fast_scans": 0,
         }
+        # -- observability (core/obs/) -------------------------------------
+        # normalized to None when detached/disabled so every hook below is
+        # a single attribute check on the hot path
+        self.trace = trace if (trace is not None and trace.enabled) else None
+        if self.trace is not None:
+            self.trace.track("scheduler")
+            self.trace.track("queue")
+            self.trace.track("jobs")
+            for name in self.devices:
+                self.trace.track(f"dev:{name}")
+            self.queue.attach_trace(self.trace, lambda: self.now)
+            self._tr_queue_start: Dict[str, float] = {}
+            self._tr_phase: Dict[str, Tuple[str, float]] = {}
+            self._tr_occ: Dict[Tuple[str, str], Tuple[float, str]] = {}
+            self._tr_fc_arrivals = 0
+            self._tr_fc_last_tick_s = 0.0
 
     # -- trace input -----------------------------------------------------------
 
@@ -630,6 +656,8 @@ class Cluster:
             self._on_gang_reserve(ev.payload[0], t)
         elif ev.kind == EventKind.FORECAST_TICK:
             self._on_forecast_tick(t)
+        if self.trace is not None:
+            self._trace_counters(t)
         self._flush_if_due()
         return ev
 
@@ -683,6 +711,82 @@ class Cluster:
             payload = (dev_name, name)
         self.event_log.append((round(ev.time_s, 9), ev.kind.value, payload))
 
+    # -- trace hooks (core/obs/) -------------------------------------------------
+    #
+    # Every method below is called only when ``self.trace`` is attached, and
+    # none of them touch scheduler state — tracing a run cannot change it
+    # (tests/test_obs.py pins a traced cell byte-identical to an untraced
+    # one). Span bookkeeping lives cluster-side: occupancy and phase
+    # intervals open here and close on completion/displacement, so the
+    # recorder only ever sees closed spans.
+
+    def _trace_counters(self, t: float) -> None:
+        """Sample the counter series on an event boundary (post-handler)."""
+        tr = self.trace
+        tr.counter("queue_depth", t, len(self.queue))
+        tr.counter("warm_set", t, len(self.queue.prewarmed_devices))
+        running = 0
+        for dev in self.devices.values():
+            tr.counter(f"util:{dev.name}", t, round(self._busy_fraction(dev), 6))
+            running += len(dev.running)
+        tr.counter("running_jobs", t, running)
+        slo_steps = 0.0
+        slo_met = 0.0
+        for j in self.jobs.values():
+            slo_steps += j.slo_steps
+            slo_met += j.slo_met_steps
+        tr.counter(
+            "slo_attainment",
+            t,
+            round(slo_met / slo_steps, 6) if slo_steps > 0 else 1.0,
+        )
+
+    def _tr_note_dispatch(self, cj: ClusterJob, t: float, *, first: bool) -> None:
+        """Close the job's queued span and record the dispatch decision."""
+        t0 = self._tr_queue_start.pop(cj.name, cj.arrival_s)
+        self.trace.span("queue", f"{cj.name} queued", t0, t, cat="queue")
+        self.trace.instant(
+            "scheduler",
+            "dispatch",
+            t,
+            args={
+                "job": cj.name,
+                "device": cj.device or "",
+                "wait_s": round(t - t0, 9),
+                "first": first,
+            },
+        )
+        self._tr_phase[cj.name] = (cj.current_span().name, t)
+
+    def _tr_close_phase(self, cj: ClusterJob, t: float) -> None:
+        ph = self._tr_phase.pop(cj.name, None)
+        if ph is not None:
+            self.trace.span("jobs", f"{cj.name}:{ph[0]}", ph[1], t, cat="phase")
+
+    def _tr_occupy(self, dev_name: str, key: str, label: str, t: float) -> None:
+        self._tr_occ[(dev_name, key)] = (t, label)
+
+    def _tr_release_occ(self, dev_name: str, key: str, t: float) -> None:
+        rec = self._tr_occ.pop((dev_name, key), None)
+        if rec is not None:
+            self.trace.span(f"dev:{dev_name}", rec[1], rec[0], t, cat="occupancy")
+
+    def _tr_completion_sample(self, cj: ClusterJob, profile: str, t: float) -> None:
+        """Lifetime-average measured step vs the final predicted rate —
+        the sample the calibration item gets even without live
+        ``observe_step`` telemetry."""
+        if cj.started_s is None or t <= cj.started_s or cj.total_steps <= 0:
+            return
+        self.trace.step_sample(
+            t,
+            cj.name,
+            cj.spec.arch,
+            profile,
+            (t - cj.started_s) / cj.total_steps,
+            cj.step_s,
+            source="completion",
+        )
+
     # -- handlers ---------------------------------------------------------------
 
     def _enqueue(self, name: str, cj: ClusterJob, t: float) -> None:
@@ -690,6 +794,8 @@ class Cluster:
         placement candidate for the skip-scan dispatcher."""
         e = self.queue.push(name, cj, priority=cj.spec.priority, enqueued_s=t)
         self._pending_entries.append(e)
+        if self.trace is not None:
+            self._tr_queue_start[name] = t
 
     def _on_arrival(self, name: str, t: float) -> None:
         cj = self.jobs[name]
@@ -700,6 +806,10 @@ class Cluster:
         if reason is not None:
             cj.rejected_reason = reason
             self.rejected.append((name, reason))
+            if self.trace is not None:
+                self.trace.instant(
+                    "scheduler", "reject", t, args={"job": name, "reason": reason}
+                )
             return
         if self._fc_estimator is not None:
             self._fc_observe_arrival(cj, t)
@@ -721,6 +831,10 @@ class Cluster:
         cj.steps_done = float(cj.total_steps)  # clamp fp residue
         cj.finished_s = t
         cj.device = None
+        if self.trace is not None:
+            self._tr_close_phase(cj, t)
+            self._tr_release_occ(dev.name, name, t)
+            self._tr_completion_sample(cj, dev.assignments[name].profile, t)
         del dev.running[name]
         del dev.assignments[name]
         self.completed.append(name)
@@ -750,10 +864,14 @@ class Cluster:
         cj.steps_done = float(cj.total_steps)  # clamp fp residue
         cj.finished_s = t
         cj.device = None
+        if self.trace is not None:
+            self._tr_close_phase(cj, t)
         for rank, dname in enumerate(cj.member_devices):
             d = self.devices[dname]
             d.running.pop(cj.name, None)
             d.assignments.pop(member_name(cj.name, rank), None)
+            if self.trace is not None:
+                self._tr_release_occ(dname, member_name(cj.name, rank), t)
         cj.member_devices = ()
         self.completed.append(cj.name)
         self._capacity_epoch += 1
@@ -777,6 +895,9 @@ class Cluster:
         if abs(cj.steps_done - boundary) < 1e-6:
             cj.steps_done = float(boundary)
         cj.phase_transitions += 1
+        if self.trace is not None:
+            self._tr_close_phase(cj, t)
+            self._tr_phase[name] = (cj.current_span().name, t)
         if dev.mode == CollocationMode.MIG:
             if cj.world_size > 1:
                 # every member re-prices at the new demand; the gang step
@@ -990,14 +1111,24 @@ class Cluster:
                         break
             if placed:
                 self.queue.remove(entry.key)
+                first = cj.started_s is None
                 if cj.started_s is None:
                     cj.started_s = t
+                if self.trace is not None:
+                    self._tr_note_dispatch(cj, t, first=first)
                 if blocked_any or (
                     known_blocked
                     and floor is not None
                     and floor < entry.sort_key()
                 ):
                     self.queue.note_backfill_overtake()
+                    if self.trace is not None:
+                        self.trace.instant(
+                            "scheduler",
+                            "backfill_overtake",
+                            t,
+                            args={"job": cj.name, "device": cj.device or ""},
+                        )
             else:
                 blocked_any = True
                 if self.retime == "incremental":
@@ -1035,8 +1166,30 @@ class Cluster:
         if not dev.available(t):
             return False
         if self.queue.reserved_against(cj.name, dev.name):
+            if self.trace is not None:
+                self.trace.instant(
+                    "scheduler",
+                    "veto_reserved",
+                    t,
+                    args={
+                        "job": cj.name,
+                        "device": dev.name,
+                        "held_by": self.queue.reserved_by,
+                    },
+                )
             return False  # held for a starved gang — backfill must not refill
         if self.queue.prewarm_blocks(dev.name, cj.kind):
+            if self.trace is not None:
+                self.trace.instant(
+                    "scheduler",
+                    "veto_prewarm",
+                    t,
+                    args={
+                        "job": cj.name,
+                        "device": dev.name,
+                        "warmed_for": self.queue.prewarmed_kind(dev.name),
+                    },
+                )
             return False  # pre-warmed for another kind ahead of a ramp
         if dev.mode == CollocationMode.MIG:
             sched = dev.scheduler.schedule(
@@ -1074,6 +1227,8 @@ class Cluster:
         dev.running[cj.name] = cj
         cj.device = dev.name
         cj.last_update_s = t
+        if self.trace is not None:
+            self._tr_occupy(dev.name, cj.name, f"{cj.name} {dev.mode.value}", t)
         for a in sched.assignments:
             j = dev.running[a.job.name]
             j.step_s = a.predicted_step_s
@@ -1113,6 +1268,8 @@ class Cluster:
         dev.running[cj.name] = cj
         cj.device = dev.name
         cj.last_update_s = t
+        if self.trace is not None:
+            self._tr_occupy(dev.name, cj.name, f"{cj.name} {dev.mode.value}", t)
         self._apply_shared_steps(dev, order, steps, t)
         self._dirty.pop(dev.name, None)  # the placement re-priced everyone
         return True
@@ -1127,6 +1284,10 @@ class Cluster:
         cj.device = dev.name
         cj.step_s = a.predicted_step_s
         cj.last_update_s = t
+        if self.trace is not None:
+            self._tr_occupy(
+                dev.name, cj.name, f"{cj.name} {a.placement.profile}", t
+            )
         self._schedule_next_event(dev, cj, t)
 
     # -- gang scheduling (core/gang/) -------------------------------------------
@@ -1229,6 +1390,17 @@ class Cluster:
         ClusterJob registered in each member device's running map (the
         progress guard makes the multi-registration idempotent); its
         single lifecycle event lives on the primary (rank-0) device."""
+        if self.trace is not None:
+            self.trace.instant(
+                "scheduler",
+                "gang_place",
+                t,
+                args={
+                    "gang": cj.name,
+                    "prefer": self.gang_placement,
+                    **plan.provenance(),
+                },
+            )
         for slot in plan.slots:
             dev = self.devices[slot.device]
             self._accrue_busy(dev, t)
@@ -1236,6 +1408,13 @@ class Cluster:
                 members[slot.rank], slot.placement, slot.step_s
             )
             dev.running[cj.name] = cj
+            if self.trace is not None:
+                self._tr_occupy(
+                    slot.device,
+                    member_name(cj.name, slot.rank),
+                    f"{cj.name}#r{slot.rank} {slot.placement.profile}",
+                    t,
+                )
         cj.member_devices = plan.devices
         cj.gang_spread = plan.spread
         cj.device = plan.slots[0].device
@@ -1284,6 +1463,10 @@ class Cluster:
             d = self.devices[dname]
             d.running.pop(cj.name, None)
             d.assignments.pop(member_name(cj.name, rank), None)
+            if self.trace is not None:
+                self._tr_release_occ(dname, member_name(cj.name, rank), t)
+        if self.trace is not None:
+            self._tr_close_phase(cj, t)
         cj.member_devices = ()
         cj.rollback_to_checkpoint()
         cj.token += 1
@@ -1305,6 +1488,13 @@ class Cluster:
         clock (once). Holders of the reservation simply keep waiting for
         their reserved devices to drain — the heartbeat re-check is driven
         by the GANG_RESERVE event itself."""
+        if self.trace is not None:
+            self.trace.instant(
+                "scheduler",
+                "gang_blocked",
+                t,
+                args={"gang": cj.name, "world_size": cj.world_size},
+            )
         if not cj.gang_reserve_pending and self.queue.reserved_by != cj.name:
             self._push_gang_reserve(cj, t)
 
@@ -1352,6 +1542,10 @@ class Cluster:
         self.queue.remove(cj.name)  # releases any reservation it held
         cj.rejected_reason = reason
         self.rejected.append((cj.name, reason))
+        if self.trace is not None:
+            self.trace.instant(
+                "scheduler", "gang_reject", t, args={"gang": cj.name, "reason": reason}
+            )
         self._capacity_epoch += 1  # a released reservation re-opens devices
         self._dispatch(t)
 
@@ -1693,6 +1887,9 @@ class Cluster:
         migration, and straggler-repack handlers."""
         cj = dev.running.pop(name)
         dev.assignments.pop(name, None)
+        if self.trace is not None:
+            self._tr_release_occ(dev.name, name, t)
+            self._tr_close_phase(cj, t)
         cj.rollback_to_checkpoint()
         cj.token += 1  # invalidate the in-flight completion event
         if cj.pending_event is not None:
@@ -1838,6 +2035,27 @@ class Cluster:
             # dict stays schema-identical to pre-forecast artifacts
             event["kind"] = kind
         self.migration_events.append(event)
+        if self.trace is not None:
+            self.trace.span(
+                f"dev:{dev.name}",
+                f"reconfig {event['from']}->{event['to']}",
+                t,
+                t + cost,
+                cat="reconfig",
+            )
+            self.trace.instant(
+                "scheduler",
+                "migrate",
+                t,
+                args={
+                    "device": dev.name,
+                    "from": event["from"],
+                    "to": event["to"],
+                    "requeued": list(requeued),
+                    "cost_s": cost,
+                    "kind": kind or "reactive",
+                },
+            )
         self.events.push(t + cost, EventKind.RECONFIG_DONE, (dev.name,))
 
     # -- plan-driven re-partitions (planner policy) -----------------------------------
@@ -1982,8 +2200,11 @@ class Cluster:
                 cj.spec, pl.profile, cj.active_demand()
             )
             self._bind(dev, cj, Assignment(cj.spec, pl, step), t_eff)
+            first = cj.started_s is None
             if cj.started_s is None:
                 cj.started_s = t_eff
+            if self.trace is not None:
+                self._tr_note_dispatch(cj, t_eff, first=first)
             placed.append(name)
         dev.reconfiguring_until = t_eff
         self._next_reopen = min(self._next_reopen, dev.reconfiguring_until)
@@ -2006,6 +2227,37 @@ class Cluster:
                 "reconfig_cost_s": cost,
             }
         )
+        if self.trace is not None:
+            self.trace.span(
+                f"dev:{dev.name}",
+                f"replan {dev.mode.value}",
+                t,
+                t_eff,
+                cat="reconfig",
+            )
+            prov = (
+                trial.plan.provenance()
+                if trial.plan is not None
+                else {
+                    "layout": [],
+                    "optimality": None,
+                    "gap": None,
+                    "configs_evaluated": 0,
+                }
+            )
+            self.trace.instant(
+                "scheduler",
+                "replan",
+                t,
+                args={
+                    "device": dev.name,
+                    "kept": sorted(kept),
+                    "requeued": list(displaced),
+                    "placed": sorted(placed),
+                    "cost_s": cost,
+                    **prov,
+                },
+            )
         self.events.push(t_eff, EventKind.RECONFIG_DONE, (dev.name,))
 
     # -- forecast-driven autoscaling (forecast policy) --------------------------------
@@ -2032,6 +2284,8 @@ class Cluster:
             self._fc_estimator.observe(t)
             self._fc_serve_seen += 1
             self._fc_serve_rep = cj.spec
+            if self.trace is not None:
+                self._tr_fc_arrivals += 1
         self._ensure_forecast_tick(t)
 
     def _fc_note_session(self, service_s: float) -> None:
@@ -2056,6 +2310,19 @@ class Cluster:
         self._fc_ticks += 1
         fc = self._fc_estimator.forecast(t, cfg.horizon_s)
         self._fc_last = fc
+        if self.trace is not None:
+            # realized rate over the tick window that just closed — the
+            # ground truth this tick's prediction is scored against
+            window = t - self._tr_fc_last_tick_s
+            realized = self._tr_fc_arrivals / window if window > 0 else 0.0
+            self.trace.instant(
+                "scheduler",
+                "forecast_tick",
+                t,
+                args=forecast_provenance(fc, round(realized, 9)),
+            )
+            self._tr_fc_arrivals = 0
+            self._tr_fc_last_tick_s = t
         if fc.rate_per_s > self._fc_peak_rate:
             self._fc_peak_rate = fc.rate_per_s
         if self._fc_autoscale(t, fc):
@@ -2266,6 +2533,17 @@ class Cluster:
             return  # gangs pace at the slowest member + comms; there is no
             # single bigger slice a straggler repack could move them to
         dev = self.devices[cj.device]
+        if self.trace is not None:
+            a = dev.assignments.get(job_name)
+            self.trace.step_sample(
+                t,
+                job_name,
+                cj.spec.arch,
+                a.placement.profile if a is not None else dev.mode.value,
+                step_s,
+                cj.step_s,
+                source="observe",
+            )
         dev.scheduler.observe_step(job_name, step_s)
         if dev.mode != CollocationMode.MIG:
             return  # shared modes have no bigger slice to repack onto
@@ -2285,6 +2563,13 @@ class Cluster:
                 priority=jc.spec.priority + REQUEUE_PRIORITY_BUMP,
                 min_profile=bigger,
             )
+            if self.trace is not None:
+                self.trace.instant(
+                    "scheduler",
+                    "straggler_repack",
+                    t,
+                    args={"job": name, "device": dev.name, "min_profile": bigger},
+                )
             self._displace(dev, name, t, new_spec=bumped, count_repack=True)
             dev.scheduler.reset_observation(name)
             dev.straggler_repacks += 1

@@ -97,11 +97,19 @@ class EventQueue:
         self.max_time_pushed = float("-inf")
         #: number of heap rebuilds triggered by the tombstone threshold.
         self.compactions = 0
+        #: total events ever tombstoned — with ``compactions`` this tells
+        #: how much of a run's event traffic was re-timing churn.
+        self.tombstones = 0
+        #: largest physical heap length ever reached (live + dead), the
+        #: memory high-water mark the compaction policy is bounding.
+        self.peak_heap_len = 0
 
     def push(self, time_s: float, kind: EventKind, payload: Tuple[Any, ...] = ()) -> Event:
         ev = Event(float(time_s), self._seq, EventKind(kind), tuple(payload))
         heapq.heappush(self._heap, (ev.time_s, ev.seq, ev))
         self._seq += 1
+        if len(self._heap) > self.peak_heap_len:
+            self.peak_heap_len = len(self._heap)
         if ev.time_s > self.max_time_pushed:
             self.max_time_pushed = ev.time_s
         return ev
@@ -114,6 +122,7 @@ class EventQueue:
         if ev.seq in self._tombstoned:
             return False
         self._tombstoned.add(ev.seq)
+        self.tombstones += 1
         # reclaim space before dead weight dominates: compacting at the
         # half-full mark keeps the heap O(live) while amortizing the
         # rebuild over at least len(heap)/2 tombstone calls

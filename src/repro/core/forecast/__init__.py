@@ -21,6 +21,7 @@ from repro.core.forecast.estimator import (  # noqa: F401
 from repro.core.forecast.policy import (  # noqa: F401
     AutoscaleDecision,
     ForecastConfig,
+    forecast_provenance,
     next_tick,
     plan_autoscale,
     wave_amortizes,

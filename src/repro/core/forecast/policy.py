@@ -35,6 +35,7 @@ __all__ = [
     "plan_autoscale",
     "wave_amortizes",
     "next_tick",
+    "forecast_provenance",
 ]
 
 
@@ -204,3 +205,21 @@ def next_tick(t: float, tick_s: float) -> float:
         k += 1.0
         nt = k * tick_s
     return nt
+
+
+def forecast_provenance(fc: RateForecast, realized_per_s: float) -> dict:
+    """Predicted band vs realized arrivals, for the trace layer (core/obs/).
+
+    The cluster measures ``realized_per_s`` over the tick window that just
+    closed and records one ``forecast_tick`` decision instant per tick —
+    the per-tick absolute error series that ``benchmarks/report.py trace``
+    summarizes, and the ground truth the estimator is judged against."""
+    return {
+        "rate_per_s": fc.rate_per_s,
+        "lower_per_s": fc.lower_per_s,
+        "upper_per_s": fc.upper_per_s,
+        "horizon_s": fc.horizon_s,
+        "realized_per_s": realized_per_s,
+        "abs_err_per_s": abs(fc.rate_per_s - realized_per_s),
+        "in_band": bool(fc.lower_per_s <= realized_per_s <= fc.upper_per_s),
+    }

@@ -65,6 +65,21 @@ class GangPlan:
         """Device per rank — what the cluster records on the ClusterJob."""
         return tuple(s.device for s in self.slots)
 
+    def provenance(self) -> dict:
+        """Decision summary for the trace layer (core/obs/): where every
+        rank landed and what the candidate cost — the terms the pack/spread
+        search ranked by, so a ``gang_place`` instant explains why this
+        layout beat the alternatives."""
+        return {
+            "devices": sorted(set(self.devices)),
+            "slots": [
+                f"r{s.rank}:{s.device}:{s.placement.profile}" for s in self.slots
+            ],
+            "spread": self.spread,
+            "step_s": self.step_s,
+            "comm_s": self.comm_s,
+        }
+
 
 def split_counts(
     capacities: Sequence[int], world_size: int, prefer: str

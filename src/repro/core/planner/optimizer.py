@@ -123,6 +123,22 @@ class PlacementPlan:
         """(kept, destroyed, created) relative to the live layout."""
         return transition(self.existing, self.layout)
 
+    def provenance(self) -> Dict[str, object]:
+        """Committed-vs-considered summary for the trace layer (core/obs/):
+        the layout this plan commits, which search tier chose it, the
+        optimality gap bound, and how much of the partition tree was
+        evaluated — everything a ``replan`` decision instant must explain."""
+        return {
+            "layout": [f"{pl.profile}@{pl.start}" for pl in self.layout],
+            "optimality": self.optimality,
+            "gap": self.gap,
+            "configs_evaluated": self.configs_evaluated,
+            "placed_weight": self.placed_weight,
+            "kept_weight": self.kept_weight,
+            "goodput": self.goodput,
+            "unplaced": [name for name, _ in self.unplaced],
+        }
+
 
 def _job_weight(job) -> float:
     return 1.0 + float(getattr(job, "priority", 0))

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Any, Dict, FrozenSet, List, Optional
+from typing import Any, Callable, Dict, FrozenSet, List, Optional
 
 
 @dataclasses.dataclass
@@ -85,6 +85,17 @@ class AdmissionQueue:
         self._prewarmed: Dict[str, str] = {}
         self.prewarms_made = 0
         self.prewarms_released = 0
+        # decision-provenance sink (core/obs/): None means "not traced" and
+        # every hook below is a single attribute check
+        self._trace = None
+        self._trace_clock: Optional[Callable[[], float]] = None
+
+    def attach_trace(self, recorder, clock: Callable[[], float]) -> None:
+        """Wire a ``TraceRecorder``. ``clock`` supplies the sim time for
+        queue actions whose signatures carry none (reserve/prewarm) —
+        the cluster passes its event-loop clock."""
+        self._trace = recorder
+        self._trace_clock = clock
 
     def push(self, key: str, item: Any, *, priority: int, enqueued_s: float) -> QueueEntry:
         if key in self._entries:
@@ -95,6 +106,13 @@ class AdmissionQueue:
         bisect.insort(self._sorted, e, key=QueueEntry.sort_key)
         if len(self._entries) > self.peak_depth:
             self.peak_depth = len(self._entries)
+        if self._trace is not None:
+            self._trace.instant(
+                "scheduler",
+                "enqueue",
+                e.enqueued_s,
+                args={"job": key, "priority": e.priority, "depth": len(self._entries)},
+            )
         return e
 
     def remove(self, key: str) -> QueueEntry:
@@ -137,6 +155,13 @@ class AdmissionQueue:
         self._reserved_by = key
         self._reserved_devices = frozenset(devices)
         self.reservations_made += 1
+        if self._trace is not None:
+            self._trace.instant(
+                "scheduler",
+                "gang_reserve",
+                self._trace_clock(),
+                args={"gang": key, "devices": sorted(self._reserved_devices)},
+            )
 
     def release(self, key: str) -> bool:
         """Drop ``key``'s reservation if it holds one; True if it did.
@@ -146,6 +171,10 @@ class AdmissionQueue:
         self._reserved_by = None
         self._reserved_devices = frozenset()
         self.reservations_released += 1
+        if self._trace is not None:
+            self._trace.instant(
+                "scheduler", "gang_release", self._trace_clock(), args={"gang": key}
+            )
         return True
 
     @property
@@ -172,6 +201,13 @@ class AdmissionQueue:
         self._prewarmed[device] = kind
         if fresh:
             self.prewarms_made += 1
+            if self._trace is not None:
+                self._trace.instant(
+                    "scheduler",
+                    "prewarm",
+                    self._trace_clock(),
+                    args={"device": device, "kind": kind},
+                )
         return fresh
 
     def prewarm_release(self, device: str) -> bool:
@@ -180,6 +216,10 @@ class AdmissionQueue:
             return False
         del self._prewarmed[device]
         self.prewarms_released += 1
+        if self._trace is not None:
+            self._trace.instant(
+                "scheduler", "prewarm_release", self._trace_clock(), args={"device": device}
+            )
         return True
 
     def prewarm_blocks(self, device: str, kind: str) -> bool:
@@ -191,6 +231,11 @@ class AdmissionQueue:
 
     def is_prewarmed(self, device: str) -> bool:
         return device in self._prewarmed
+
+    def prewarmed_kind(self, device: str) -> Optional[str]:
+        """The kind ``device`` is warmed for, or None — the trace layer's
+        ``veto_prewarm`` provenance names what the device was held for."""
+        return self._prewarmed.get(device)
 
     @property
     def prewarmed_devices(self) -> FrozenSet[str]:

@@ -90,6 +90,7 @@ from repro.core.collocation import is_sku_keyed_db
 from repro.core.forecast import ForecastConfig
 from repro.core.device import DEFAULT_SKU, SKUS, DeviceSKU, format_gib, get_sku
 from repro.core.gang.parallelism import PARALLELISMS, resolve_parallelism
+from repro.core.obs import EXPORTERS, TraceRecorder
 
 # The seeded trace generators live in launch/traces.py (one copy of the
 # Poisson / diurnal / burst stream machinery); the historical public names
@@ -386,6 +387,7 @@ def run_cell(
     gang_parallelism: str = "tp2",
     gang_reserve_after_s: float = 0.5,
     gang_degrade: bool = False,
+    trace: Optional[TraceRecorder] = None,
 ) -> Dict:
     """One (scenario x policy) simulation; returns the artifact cell dict.
 
@@ -405,7 +407,11 @@ def run_cell(
     gangs' descriptor, and ``gang_degrade`` collapses every gang spec to
     a world_size-1 singleton — the full-slice-only baseline the gang
     report prices (benchmarks/report.py gang), under which the qwen2-72b
-    class fits nothing and is rejected instead of sharded."""
+    class fits nothing and is rejected instead of sharded.
+
+    ``trace`` attaches a ``TraceRecorder`` (core/obs/, --trace): the cell
+    dict is byte-identical either way — tracing is purely observational —
+    and the caller exports the recorder afterwards."""
     fleet_skus: Tuple[str, ...] = (
         HETERO_FLEET_SKUS if scenario == "hetero_sku"
         else GANG_FLEET_SKUS if scenario == "gang_pipeline"
@@ -440,17 +446,18 @@ def run_cell(
             if cluster_policy == "forecast"
             else None
         ),
+        trace=trace,
     )
-    trace = make_trace(
+    jobs = make_trace(
         scenario, seed, n_jobs, n_devices, gang_parallelism=gang_parallelism
     )
     if gang_degrade:
-        trace = [
+        jobs = [
             (t, dataclasses.replace(spec, world_size=1, parallelism=None)
              if getattr(spec, "world_size", 1) > 1 else spec, epochs)
-            for t, spec, epochs in trace
+            for t, spec, epochs in jobs
         ]
-    for arrival_s, spec, epochs in trace:
+    for arrival_s, spec, epochs in jobs:
         cluster.submit(
             spec, arrival_s, epochs=epochs, samples_per_epoch=SIM_SAMPLES_PER_EPOCH
         )
@@ -459,7 +466,7 @@ def run_cell(
         "scenario": scenario,
         "policy": policy,
         "seed": seed,
-        "n_jobs": len(trace),
+        "n_jobs": len(jobs),
         "n_devices": n_devices,
         "reconfig_cost_s": reconfig_cost_s,
         "status": "OK",
@@ -594,6 +601,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "purely a cross-check — it must equal the "
                          "--gang-parallelism descriptor's world size "
                          "(world_size is always derived, never free)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record a deterministic scheduler trace per cell "
+                         "(core/obs/) and export it next to the artifact "
+                         "as _trace__<scenario>__<policy>.json (Perfetto) "
+                         "and _counters__<scenario>__<policy>.json")
+    ap.add_argument("--trace-exporter", default=None,
+                    choices=sorted(EXPORTERS) + ["both"],
+                    help="which trace export(s) --trace writes "
+                         "(default: both)")
     ap.add_argument("--list", action="store_true",
                     help="print the registered scenarios, fleet policies, "
                          "and device SKUs, and exit")
@@ -630,6 +646,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 f"{dev.n_compute_slices} compute slices, "
                 f"{len(dev.profiles)} profiles{default}"
             )
+        print("trace exporters (--trace, --trace-exporter):")
+        print("  perfetto         Chrome-trace-event JSON (ui.perfetto.dev)")
+        print("  counters         flat counter series + step samples")
+        print("  both             write both files per cell (default)")
         return 0
 
     # fail fast with the registered choices listed — not a KeyError
@@ -669,6 +689,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             "a100-40gb profile names only; it cannot drive a "
             f"--sku {args.sku} fleet"
         )
+    if args.trace_exporter is not None and not args.trace:
+        ap.error("--trace-exporter requires --trace")
+    exporter = args.trace_exporter or "both"
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -700,6 +723,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             continue
         for policy in policies:
             try:
+                recorder = TraceRecorder() if args.trace else None
                 cell = run_cell(
                     scenario,
                     policy,
@@ -712,8 +736,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     retime=args.retime,
                     gang_placement=args.gang_placement,
                     gang_parallelism=args.gang_parallelism,
+                    trace=recorder,
                 )
                 _dump(out_dir / f"{scenario}__{policy}.json", cell)
+                if recorder is not None:
+                    # "_"-prefixed so artifact loaders that glob cell files
+                    # (benchmarks/common.load_cluster) skip trace exports
+                    prefixes = {"perfetto": "_trace", "counters": "_counters"}
+                    for ex_name in (
+                        sorted(EXPORTERS) if exporter == "both" else [exporter]
+                    ):
+                        _dump(
+                            out_dir
+                            / f"{prefixes[ex_name]}__{scenario}__{policy}.json",
+                            EXPORTERS[ex_name](recorder),
+                        )
                 s = summarize_cell(cell)
                 summaries.append(s)
                 print(

@@ -36,6 +36,9 @@ import repro.core.planner.optimizer
 import repro.core.forecast
 import repro.core.forecast.estimator
 import repro.core.forecast.policy
+import repro.core.obs
+import repro.core.obs.recorder
+import repro.core.obs.perfetto
 
 from repro.core.workload import serve_workload, train_workload  # noqa: F401
 from repro.core.planner import enumerate_configs, plan_placements  # noqa: F401
@@ -61,6 +64,16 @@ assert cell["report"]["still_queued"] == 0, cell
 cell = run_cell("diurnal_serve", "forecast", n_jobs=6, n_devices=2)
 assert cell["status"] == "OK", cell
 assert cell["report"]["forecast"]["ticks"] > 0, cell
+
+# the trace layer records and exports jax-free as well
+from repro.core.obs import TraceRecorder, export_counters, export_perfetto
+
+rec = TraceRecorder()
+cell = run_cell("train_serve_mix", "all-mig", n_jobs=8, n_devices=2, trace=rec)
+assert cell["status"] == "OK", cell
+assert len(rec.spans) > 0 and len(rec.instants) > 0
+assert export_perfetto(rec)["traceEvents"]
+assert export_counters(rec)["counters"]
 print("jax-free-ok")
 """
 

@@ -1,0 +1,79 @@
+"""core/metrics.py table formatters: header-only on empty input, aligned
+single-row rendering — the text surfaces EXPERIMENTS.md and the launch
+scripts print."""
+from repro.core.metrics import (
+    DeviceGroupReport,
+    ModeComparison,
+    format_group_table,
+    format_mode_table,
+)
+
+
+def _mode_row():
+    return ModeComparison(
+        workload="resnet_small",
+        mode="mps",
+        k_jobs=3,
+        effective_step_s=0.0125,
+        solo_step_s=0.01,
+        fits=True,
+        max_interference=1.25,
+    )
+
+
+def _group_row():
+    return DeviceGroupReport(
+        group="1g.5gb parallel",
+        workload="resnet_small",
+        instance_metrics=[
+            {"gract": 0.14, "smact": 0.12, "smocc_proxy": 0.3, "drama": 0.05}
+        ],
+        device_metrics={
+            "gract": 0.143,
+            "smact": 0.125,
+            "smocc_proxy": 0.301,
+            "drama": 0.052,
+        },
+        occupied_units=1,
+    )
+
+
+def test_format_mode_table_empty_is_header_and_rule_only():
+    out = format_mode_table([])
+    lines = out.splitlines()
+    assert len(lines) == 2  # header + rule, no data rows
+    assert "workload" in lines[0] and "speedup" in lines[0]
+    assert set(lines[1]) == {"-"}
+    assert len(lines[1]) == len(lines[0])
+
+
+def test_format_mode_table_single_row_values_and_alignment():
+    out = format_mode_table([_mode_row()])
+    lines = out.splitlines()
+    assert len(lines) == 3
+    row = lines[2]
+    assert "resnet_small" in row and "mps" in row
+    assert "0.01000" in row  # solo_step_s at 5 decimals
+    assert "0.01250" in row  # effective_step_s
+    assert "1.25x" in row  # interference rendered with the x suffix
+    assert "True" in row
+    # every data line is exactly as wide as the header grid
+    assert all(len(line) <= len(lines[0]) for line in lines[1:])
+
+
+def test_format_group_table_empty_is_header_and_rule_only():
+    out = format_group_table([])
+    lines = out.splitlines()
+    assert len(lines) == 2
+    assert "group" in lines[0] and "GRACT" in lines[0]
+    assert lines[1] == "-" * len(lines[0])
+
+
+def test_format_group_table_single_row_values():
+    out = format_group_table([_group_row()])
+    lines = out.splitlines()
+    assert len(lines) == 3
+    row = lines[2]
+    assert "1g.5gb parallel" in row and "resnet_small" in row
+    assert "0.143" in row and "0.125" in row and "0.301" in row
+    assert "      1" in row  # n_inst column counts instance_metrics
