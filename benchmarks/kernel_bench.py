@@ -101,5 +101,101 @@ def run() -> list[str]:
     return out
 
 
+# -- calibration shapes (core/calib KernelBackend) ---------------------------
+#
+# One cheap, CPU-interpretable shape per kernel family: large enough that the
+# Pallas grid has multiple tiles (so the measurement exercises the real block
+# structure), small enough that interpret mode finishes in seconds. The
+# calibration harness maps each workload arch to its dominant kernel family
+# and times that kernel as the arch's measured compute proxy; families the
+# kernel suite does not cover (resnets — no conv kernel in-tree) proxy via
+# flash attention, which is documented in docs/calibration.md.
+
+#: kernel family -> the (arch-agnostic) measurement shape.
+CALIBRATION_SHAPES = {
+    "flash_attention": {"B": 1, "S": 128, "H": 4, "KVH": 2, "D": 32,
+                        "block_q": 64, "block_k": 64},
+    "decode_attention": {"B": 4, "Smax": 256, "H": 4, "KVH": 2, "D": 32,
+                         "kv_len": 192, "block_k": 128},
+    "wkv6": {"B": 1, "T": 128, "H": 4, "K": 32, "chunk": 32},
+}
+
+#: registry family (configs/registry.py ModelConfig.family) -> kernel family.
+CALIBRATION_KERNELS = {
+    "dense": "flash_attention",
+    "vlm": "flash_attention",
+    "moe": "flash_attention",
+    "encdec": "flash_attention",
+    "hybrid": "flash_attention",
+    "resnet": "flash_attention",  # proxy: no conv kernel in-tree
+    "rwkv": "wkv6",
+}
+
+
+def calibration_kernel_for(arch: str) -> str:
+    """The kernel family the calibration harness times for ``arch``."""
+    from repro.configs.registry import CONFIGS
+
+    family = getattr(CONFIGS[arch], "family", "dense")
+    return CALIBRATION_KERNELS.get(family, "flash_attention")
+
+
+def measure_calibration_kernel(
+    arch: str, *, mode: str = "interpret", n: int = 2, kernel: str = None
+):
+    """Wall-time + numerics of ``arch``'s calibration kernel.
+
+    Returns ``{"kernel", "wall_s", "max_err_vs_ref"}``: mean wall seconds
+    over ``n`` timed runs (after one warm-up) and the max abs error against
+    the pure-jnp oracle (ref.py) at the same shape. ``mode="interpret"``
+    runs the Pallas kernel on CPU — the no-GPU CI path; on TPU pass
+    ``mode=None`` to let the kernel auto-select the compiled path.
+    ``kernel`` overrides the arch->family mapping (e.g. the serve phase's
+    ``decode_attention``, which no training arch maps to)."""
+    from repro.kernels import ops, ref
+
+    kernel = kernel if kernel is not None else calibration_kernel_for(arch)
+    shp = CALIBRATION_SHAPES[kernel]
+    ks = jax.random.split(jax.random.key(0), 6)
+
+    if kernel == "flash_attention":
+        q = jax.random.normal(ks[0], (shp["B"], shp["S"], shp["H"], shp["D"]))
+        k = jax.random.normal(ks[1], (shp["B"], shp["S"], shp["KVH"], shp["D"]))
+        v = jax.random.normal(ks[2], (shp["B"], shp["S"], shp["KVH"], shp["D"]))
+        run_it = lambda: ops.flash_attention(
+            q, k, v, block_q=shp["block_q"], block_k=shp["block_k"], mode=mode
+        )
+        oracle = lambda: ref.mha_reference(q, k, v)
+    elif kernel == "decode_attention":
+        q = jax.random.normal(ks[0], (shp["B"], shp["H"], shp["D"]))
+        kc = jax.random.normal(ks[1], (shp["B"], shp["Smax"], shp["KVH"], shp["D"]))
+        vc = jax.random.normal(ks[2], (shp["B"], shp["Smax"], shp["KVH"], shp["D"]))
+        run_it = lambda: ops.decode_attention(
+            q, kc, vc, kv_len=shp["kv_len"], block_k=shp["block_k"], mode=mode
+        )
+        oracle = lambda: ref.decode_attention_reference(q, kc, vc, kv_len=shp["kv_len"])
+    elif kernel == "wkv6":
+        B, T, H, K = shp["B"], shp["T"], shp["H"], shp["K"]
+        r = jax.random.normal(ks[0], (B, T, H, K))
+        k = jax.random.normal(ks[1], (B, T, H, K))
+        v = jax.random.normal(ks[2], (B, T, H, K))
+        logw = -jnp.abs(jax.random.normal(ks[3], (B, T, H, K))) - 0.05
+        u = jax.random.normal(ks[4], (H, K))
+        s0 = jax.random.normal(ks[5], (B, H, K, K))
+        run_it = lambda: ops.wkv6(r, k, v, logw, u, s0, chunk=shp["chunk"], mode=mode)
+        oracle = lambda: ref.wkv6_reference(r, k, v, logw, u, s0)
+    else:
+        raise KeyError(f"no calibration shape for kernel {kernel!r}")
+
+    def _flat(x):
+        return jnp.concatenate(
+            [jnp.ravel(t).astype(jnp.float32) for t in jax.tree_util.tree_leaves(x)]
+        )
+
+    err = float(jnp.max(jnp.abs(_flat(run_it()) - _flat(oracle()))))
+    wall = _time(lambda: run_it(), n=n)
+    return {"kernel": kernel, "wall_s": wall, "max_err_vs_ref": err}
+
+
 if __name__ == "__main__":
     print("\n".join(run()))

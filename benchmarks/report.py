@@ -9,6 +9,9 @@
     PYTHONPATH=src python -m benchmarks.report gang       # gang placement goodput
     PYTHONPATH=src python -m benchmarks.report autoscale  # forecast vs reactive
     PYTHONPATH=src python -m benchmarks.report trace      # scheduler trace health
+    PYTHONPATH=src python -m benchmarks.report trace --format json
+                                                          # step-error doc (calib feed)
+    PYTHONPATH=src python -m benchmarks.report calibrate  # seed vs calibrated error
 
 All sections render through the shared table renderer
 (benchmarks/common.py:format_table, markdown style).
@@ -259,6 +262,7 @@ _DEVICES_COLUMNS = (
     Column("naive", "naive placed"),
     Column("best", "best mode"),
     Column("best_tput", "best steps/s", fmt="{:.0f}"),
+    Column("provenance", "char provenance"),
 )
 
 
@@ -275,6 +279,7 @@ def fmt_devices() -> str:
     Everything is computed in-process from the analytic characterization
     (milliseconds, deterministic — no artifacts needed).
     """
+    from repro.core.calib import seed_provenance
     from repro.core.collocation import CollocationScheduler
     from repro.core.device import SKUS, format_gib
     from repro.core.instance import JobSpec
@@ -318,13 +323,18 @@ def fmt_devices() -> str:
                 "naive": scores[CollocationMode.NAIVE][0],
                 "best": winner.value,
                 "best_tput": scores[winner][1],
+                "provenance": seed_provenance(name),
             }
         )
     head = (
         "same job mix (4x slice-aligned, 2x 2g-class, 1x medium train, "
         "1x big-memory serve) scored on every registered SKU "
         "(core/device.py); 'placed' counts jobs each mode admits — the "
-        "hardware generation, not just the mode, decides the verdict"
+        "hardware generation, not just the mode, decides the verdict. "
+        "'char provenance' is where each SKU's characterization numbers "
+        "come from (core/calib/): only the paper's device is measured — "
+        "every other row's verdict rests on extrapolated constants until "
+        "launch/calibrate.py is run against it"
     )
     return f"{head}\n\n{format_table(_DEVICES_COLUMNS, rows, style='markdown')}"
 
@@ -509,7 +519,7 @@ _TRACE_FC_COLUMNS = (
 )
 
 
-def fmt_trace() -> str:
+def fmt_trace(fmt: str = "markdown") -> str:
     """Trace-derived scheduler health report (docs/observability.md).
 
     Runs two traced seed-0 cells in-process and summarizes the recorded
@@ -526,6 +536,11 @@ def fmt_trace() -> str:
     - diurnal_serve x forecast: per-tick forecast absolute error and
       in-band fraction from the ``forecast_tick`` instants, binned by
       synthetic day (period_s = 1.0).
+
+    With ``--format json`` the step-error table alone is emitted as a
+    ``calib_step_error/v1`` document (core/calib/fit.py) — the
+    machine-readable feed ``launch/calibrate.py --from-trace`` fits
+    residuals from instead of re-deriving the aggregation.
     """
     from repro.core.obs import TraceRecorder
     from repro.launch.simulate import run_cell
@@ -581,25 +596,27 @@ def fmt_trace() -> str:
             }
         )
 
-    by_key = {}
-    for s in rec.samples:
-        by_key.setdefault((s["arch"], s["profile"]), []).append(s)
-    srows = []
-    for (arch, profile), group in sorted(by_key.items()):
-        n = len(group)
-        srows.append(
-            {
-                "arch": arch,
-                "profile": profile,
-                "n": n,
-                "measured_s": sum(s["measured_s"] for s in group) / n,
-                "predicted_s": sum(s["predicted_s"] for s in group) / n,
-                "rel_err": sum(
-                    abs(s["measured_s"] - s["predicted_s"])
-                    / s["predicted_s"]
-                    for s in group if s["predicted_s"] > 0.0
-                ) / n,
-            }
+    # the one copy of the error aggregation (core/calib/fit.py): the same
+    # rows the calibration harness fits residuals from, so the report and
+    # the calibrator can never disagree about what the step error is
+    from repro.core.calib import step_error_doc, step_error_rows
+
+    srows = step_error_rows(rec.samples)
+    if fmt == "json":
+        import json as _json
+
+        return _json.dumps(
+            step_error_doc(
+                rec.samples,
+                meta={
+                    "scenario": "train_serve_mix",
+                    "policy": "all-mig",
+                    "seed": 0,
+                    "sku": "a100-40gb",
+                },
+            ),
+            indent=2,
+            sort_keys=True,
         )
 
     fc_rec = TraceRecorder()
@@ -652,9 +669,72 @@ def fmt_trace() -> str:
     return "\n\n".join(sections)
 
 
+_CALIBRATE_COLUMNS = (
+    Column("sku"),
+    Column("keys", "(arch,slice) keys"),
+    Column("measured"),
+    Column("seed_err", "seed mean|err|", fmt="{:.4f}"),
+    Column("calib_err", "calibrated mean|err|", fmt="{:.4f}"),
+    Column("delta", "Δ"),
+    Column("provenance", "calibrated provenance"),
+)
+
+
+def fmt_calibrate(seed: int = 0) -> str:
+    """Per-SKU seed-vs-calibrated step-error table (docs/calibration.md).
+
+    For every registered SKU: load the hand-seeded analytic catalog, run
+    one full calibration pass against the deterministic stub backend
+    (ground truth = seed catalog x systematic per-arch bias x smooth
+    per-slice skew x noise), and score both DBs against that ground
+    truth. The 'Δ' column is the headline inequality — the calibrated
+    DB's mean |relative step error| must be strictly below the seed's on
+    every row (the ISSUE's acceptance bar; tests/test_calib.py and the CI
+    ``calibrate`` job gate it). Deterministic per seed, runs in-process
+    in milliseconds, no artifacts or accelerator needed."""
+    from repro.core.calib import StubBackend, calibration_report, run_calibration
+    from repro.core.device import SKUS
+    from repro.launch.simulate import synthetic_char_db
+
+    rows = []
+    for name, dev in SKUS.items():
+        db = synthetic_char_db(sku=dev)
+        backend = StubBackend(db, sku=dev, seed=seed)
+        result = run_calibration(db, backend, sku=dev, seed=seed)
+        rep = calibration_report(result, backend.true_step_s)
+        prov = rep["provenance"]
+        rows.append(
+            {
+                "sku": name,
+                "keys": rep["n_keys"],
+                "measured": rep["n_measured"],
+                "seed_err": rep["seed_mean_abs_rel_err"],
+                "calib_err": rep["calibrated_mean_abs_rel_err"],
+                "delta": f"-{100.0 * rep['error_reduction']:.1f}%",
+                "provenance": " ".join(
+                    f"{k}:{v}" for k, v in sorted(prov.items())
+                ),
+            }
+        )
+    head = (
+        f"stub-backend calibration loop per SKU (seed={seed}): measure the "
+        "MISO probe set (full device + smallest slice per arch), fit "
+        "per-arch x per-slice residuals, refine every unmeasured entry "
+        "(core/calib/); errors are mean |rel step err| vs the backend's "
+        "ground truth over all (arch, slice) keys — calibrated must beat "
+        "seed on every row"
+    )
+    return f"{head}\n\n{format_table(_CALIBRATE_COLUMNS, rows, style='markdown')}"
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "dryrun"
-    print({"dryrun": fmt_dryrun, "perf": fmt_perf, "collocate": fmt_collocate,
-           "modes": fmt_modes, "placement": fmt_placement,
-           "devices": fmt_devices, "gang": fmt_gang,
-           "autoscale": fmt_autoscale, "trace": fmt_trace}[which]())
+    fmt = "json" if "--format" in sys.argv and "json" in sys.argv else "markdown"
+    if which == "trace":
+        print(fmt_trace(fmt))
+    else:
+        print({"dryrun": fmt_dryrun, "perf": fmt_perf,
+               "collocate": fmt_collocate, "modes": fmt_modes,
+               "placement": fmt_placement, "devices": fmt_devices,
+               "gang": fmt_gang, "autoscale": fmt_autoscale,
+               "calibrate": fmt_calibrate}[which]())

@@ -61,5 +61,16 @@ def run() -> list[str]:
     return out
 
 
+def calibration_epoch_time_s(
+    step_s: float, *, samples_per_epoch: int = 3200, batch: int = 32
+) -> float:
+    """Epoch time of a measured step — the paper's metric #1 applied to a
+    calibration observation (core/calib/harness). Same steps-per-epoch
+    algebra as ``core.metrics.epoch_time_s`` (ceil division), with the
+    simulation trace defaults (``launch/traces.SIM_SAMPLES_PER_EPOCH``)
+    so harness epoch numbers line up with the simulator's clocks."""
+    return float(step_s) * (-(-int(samples_per_epoch) // int(batch)))
+
+
 if __name__ == "__main__":
     print("\n".join(run()))

@@ -129,6 +129,7 @@ from repro.core.gang.parallelism import (
 )
 from repro.core.gang.placement import GangPlan, plan_gang
 from repro.core.instance import JobSpec
+from repro.core.calib.online import OnlineCalibrator
 from repro.core.obs import TraceRecorder
 from repro.core.profiles import Placement
 from repro.core.queueing import AdmissionQueue, QueueEntry
@@ -413,6 +414,7 @@ class Cluster:
         gang_link: Optional[LinkModel] = None,
         forecast: Optional[ForecastConfig] = None,
         trace: Optional[TraceRecorder] = None,
+        calibrator: Optional[OnlineCalibrator] = None,
     ):
         """``devices`` entries are ``(name, mode)`` — the default SKU — or
         ``(name, mode, sku)`` for a heterogeneous-generation fleet
@@ -448,7 +450,16 @@ class Cluster:
         event-boundary counter sample is recorded against sim time
         (docs/observability.md). Tracing is purely observational — a
         traced run's report and artifacts are byte-identical to an
-        untraced one."""
+        untraced one.
+
+        ``calibrator`` attaches an ``OnlineCalibrator`` (core/calib/):
+        every ``observe_step`` sample additionally folds into running
+        per-(SKU, arch, profile) EWMA residuals, and each device
+        scheduler's ``predict_step`` multiplies its base prediction by
+        the current residual — predictions tighten as measured evidence
+        accumulates (MISO's online refinement). Unlike ``trace`` this IS
+        behavioural: corrected step times change packing and completion
+        clocks, which is why it is opt-in and ``None`` by default."""
         if policy not in ("static", "adaptive", "planner", "forecast"):
             raise ValueError(f"unknown policy {policy!r}")
         if forecast is not None and policy != "forecast":
@@ -491,6 +502,8 @@ class Cluster:
                 sku=sku,
                 scheduler=CollocationScheduler(db, mode=mode, sku=sku, **kwargs),
             )
+            if calibrator is not None:
+                self.devices[name].scheduler.calibrator = calibrator
         if not self.devices:
             raise ValueError("a cluster needs at least one device")
         self.events = EventQueue()
@@ -570,6 +583,9 @@ class Cluster:
         # normalized to None when detached/disabled so every hook below is
         # a single attribute check on the hot path
         self.trace = trace if (trace is not None and trace.enabled) else None
+        # online calibration (core/calib/): observe_step feeds it, the
+        # device schedulers read it (wired above); None = no refinement
+        self.calibrator = calibrator
         if self.trace is not None:
             self.trace.track("scheduler")
             self.trace.track("queue")
@@ -2533,17 +2549,35 @@ class Cluster:
             return  # gangs pace at the slowest member + comms; there is no
             # single bigger slice a straggler repack could move them to
         dev = self.devices[cj.device]
-        if self.trace is not None:
+        if self.trace is not None or self.calibrator is not None:
             a = dev.assignments.get(job_name)
-            self.trace.step_sample(
-                t,
-                job_name,
-                cj.spec.arch,
-                a.placement.profile if a is not None else dev.mode.value,
-                step_s,
-                cj.step_s,
-                source="observe",
-            )
+            profile = a.placement.profile if a is not None else dev.mode.value
+            if self.trace is not None:
+                self.trace.step_sample(
+                    t,
+                    job_name,
+                    cj.spec.arch,
+                    profile,
+                    step_s,
+                    cj.step_s,
+                    source="observe",
+                )
+            if self.calibrator is not None:
+                # MISO online refinement: fold the measured-vs-predicted
+                # sample into the running residual for this (SKU, arch,
+                # slice); the next predict_step on the key is corrected.
+                # The residual the job's prediction carried is divided
+                # back out (the scheduler recorded it at pricing time),
+                # so the EWMA estimates measured-vs-base exactly.
+                self.calibrator.observe(
+                    sku=dev.sku.name,
+                    arch=cj.spec.arch,
+                    profile=profile,
+                    measured_s=step_s,
+                    predicted_s=cj.step_s,
+                    t_s=t,
+                    applied_residual=dev.scheduler.applied_residual(job_name),
+                )
         dev.scheduler.observe_step(job_name, step_s)
         if dev.mode != CollocationMode.MIG:
             return  # shared modes have no bigger slice to repack onto

@@ -213,9 +213,21 @@ class CollocationScheduler:
         # route MIG placement through the partition-tree optimizer
         # (core/planner) instead of greedy smallest-admissible first-fit
         self.use_planner = bool(use_planner)
+        # optional online calibrator (core/calib/online.py): when attached
+        # (the cluster wires it), predict_step multiplies its memoized base
+        # prediction by the calibrator's running per-(sku, arch, profile)
+        # residual — corrections stay OUT of the memo so they can evolve
+        # between calls without poisoning the cache. None = exact pre-calib
+        # behaviour (the byte-determinism contract for untouched runs).
+        self.calibrator = None
         self._cost_model: Optional[PlanningCostModel] = None
         self._ema: Dict[str, float] = {}
         self._predicted: Dict[str, float] = {}
+        # the residual each job's last prediction carried (1.0 = none):
+        # Cluster.observe_step divides it back out so the calibrator's
+        # EWMA tracks measured-vs-BASE even when the residual has moved
+        # since the job was priced
+        self._applied_residual: Dict[str, float] = {}
         # memoized lookups: the char DB is immutable for the scheduler's
         # lifetime, so (arch, shape, profile, phase) step predictions and
         # per-arch solo profiles are computed once — the planner's inner
@@ -461,8 +473,21 @@ class CollocationScheduler:
             else:
                 step = float(phase_step_s(rec, demand))
             self._step_cache[key] = step
+        if self.calibrator is not None:
+            # applied after the memo on purpose: the cache holds the char
+            # DB's immutable base prediction, the residual is live state
+            r = self.calibrator.residual(
+                sku=self.sku.name, arch=job.arch, profile=profile
+            )
+            step *= r
+            self._applied_residual[job.name] = r
         self._predicted[job.name] = step
         return step
+
+    def applied_residual(self, job_name: str) -> float:
+        """The calibrator residual ``job_name``'s last prediction carried
+        (1.0 when no calibrator, or the job was never priced here)."""
+        return self._applied_residual.get(job_name, 1.0)
 
     # -- shared modes (naive / MPS) ------------------------------------------------
 

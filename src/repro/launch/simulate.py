@@ -85,6 +85,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ShapeSuite
 from repro.configs.registry import CONFIGS
+from repro.core.calib.records import seed_provenance
 from repro.core.cluster import Cluster
 from repro.core.collocation import is_sku_keyed_db
 from repro.core.forecast import ForecastConfig
@@ -280,6 +281,12 @@ def synthetic_char_db(
                 "memory_s": memory_s,
                 "collective_s": collective_s,
                 "peak_bytes_per_device": peak_bytes,
+                # where these numbers come from (core/calib/records.py):
+                # the A100-40GB terms are anchored to the paper's measured
+                # device; every other generation is scaled constants. Inert
+                # to the schedulers, load-bearing for calibration and the
+                # report's provenance column.
+                "provenance": seed_provenance(dev.name),
             }
     return db
 

@@ -39,6 +39,11 @@ import repro.core.forecast.policy
 import repro.core.obs
 import repro.core.obs.recorder
 import repro.core.obs.perfetto
+import repro.core.calib
+import repro.core.calib.records
+import repro.core.calib.harness
+import repro.core.calib.fit
+import repro.core.calib.online
 
 from repro.core.workload import serve_workload, train_workload  # noqa: F401
 from repro.core.planner import enumerate_configs, plan_placements  # noqa: F401
@@ -74,6 +79,17 @@ assert cell["status"] == "OK", cell
 assert len(rec.spans) > 0 and len(rec.instants) > 0
 assert export_perfetto(rec)["traceEvents"]
 assert export_counters(rec)["counters"]
+
+# the calibration loop — measure (stub), fit, refine, score — is pure
+# stdlib too, and the kernel backend only imports jax inside method bodies
+from repro.core.calib import StubBackend, calibration_report, run_calibration
+from repro.launch.simulate import synthetic_char_db
+
+db = synthetic_char_db()
+backend = StubBackend(db, seed=0)
+result = run_calibration(db, backend, seed=0)
+score = calibration_report(result, backend.true_step_s)
+assert score["calibrated_mean_abs_rel_err"] < score["seed_mean_abs_rel_err"]
 print("jax-free-ok")
 """
 
